@@ -1,0 +1,40 @@
+"""Shared benchmark helpers: timing, markdown tables, result storage."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+
+
+def timer():
+    return time.perf_counter()
+
+
+def save_json(name: str, obj) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return path
+
+
+def md_table(rows: list[dict], cols: list[str], floatfmt: str = ".4g") -> str:
+    def fmt(v):
+        if isinstance(v, float):
+            return format(v, floatfmt)
+        return str(v)
+    head = "| " + " | ".join(cols) + " |"
+    sep = "|" + "|".join(["---"] * len(cols)) + "|"
+    body = ["| " + " | ".join(fmt(r.get(c, "")) for c in cols) + " |"
+            for r in rows]
+    return "\n".join([head, sep] + body)
+
+
+def geomean(xs) -> float:
+    import numpy as np
+    xs = np.asarray([x for x in xs if x > 0], dtype=np.float64)
+    if xs.size == 0:
+        return 0.0
+    return float(np.exp(np.mean(np.log(xs))))

@@ -1,0 +1,100 @@
+"""Paper Tables 1-2 + Figure 2 analogue: partition quality of Geographer
+(balanced k-means) vs the geometric baselines (RCB / RIB / HSFC / MJ) over
+2D / 2.5D-weighted / 3D mesh classes.
+
+Metrics per (mesh, tool): wall time, edge cut, max/total communication
+volume, diameter (harmonic mean over blocks), imbalance — the paper's
+metric set minus the physical SpMV timing (no MPI cluster here; the
+total/max comm volume IS the paper's proxy for it).
+
+Figure-2 analogue: per class, geometric-mean ratio of each metric vs the
+Geographer baseline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import baselines as BL
+from repro.core import meshes as MESH
+from repro.core import metrics as MET
+from repro.core.balanced_kmeans import BKMConfig
+from repro.core.partitioner import geographer_partition
+
+from .common import geomean, md_table, save_json, timer
+
+CLASSES = {
+    "2d": ["tri", "refined2d", "rgg2d", "delaunay2d"],
+    "2.5d": ["climate25d"],
+    "3d": ["delaunay3d", "rgg3d"],
+}
+
+METRICS = ["cut", "maxCommVol", "totalCommVol", "diameter_harmonic_mean"]
+
+
+def run_tool(tool: str, mesh, k: int, seed: int = 0):
+    t0 = timer()
+    if tool == "geographer":
+        part = geographer_partition(mesh.points, k, weights=mesh.weights,
+                                    cfg=BKMConfig(k=k, epsilon=0.03),
+                                    seed=seed)
+    else:
+        part = BL.BASELINES[tool](mesh.points, k, mesh.weights)
+    dt = timer() - t0
+    ev = MET.evaluate_partition(mesh, part, k, with_diameter=True)
+    ev.update(tool=tool, time_s=dt, graph=mesh.name, k=k, n=mesh.n)
+    return ev
+
+
+def run(n: int = 20_000, k: int = 32, seeds=(0,), quick: bool = False):
+    if quick:
+        n, k, seeds = 6_000, 16, (0,)
+    tools = ["geographer", "rcb", "rib", "hsfc", "mj"]
+    rows = []
+    for cls, gens in CLASSES.items():
+        for g in gens:
+            for seed in seeds:
+                mesh = MESH.REGISTRY[g](n, seed=seed)
+                for tool in tools:
+                    ev = run_tool(tool, mesh, k, seed)
+                    ev["class"] = cls
+                    rows.append(ev)
+                    print(f"  {mesh.name:16s} {tool:10s} cut={ev['cut']:8d} "
+                          f"sumCV={ev['totalCommVol']:8d} "
+                          f"imb={ev['imbalance']:.3f} t={ev['time_s']:.2f}s")
+
+    # Figure 2 analogue: per-class geometric-mean ratios vs geographer
+    ratios = []
+    for cls in CLASSES:
+        for tool in tools[1:]:
+            row = {"class": cls, "tool": tool}
+            for met in METRICS:
+                rs = []
+                for r in rows:
+                    if r["class"] != cls or r["tool"] != tool:
+                        continue
+                    base = next(b for b in rows
+                                if b["class"] == cls
+                                and b["graph"] == r["graph"]
+                                and b["k"] == r["k"]
+                                and b["tool"] == "geographer")
+                    if base[met] > 0:
+                        rs.append(r[met] / base[met])
+                row[met + "_ratio"] = geomean(rs)
+            ratios.append(row)
+
+    out = {"rows": rows, "ratios_vs_geographer": ratios,
+           "n": n, "k": k}
+    save_json("quality", out)
+    cols = ["graph", "tool", "time_s", "cut", "maxCommVol", "totalCommVol",
+            "diameter_harmonic_mean", "imbalance"]
+    print("\n### Tables 1-2 analogue (per-mesh quality)\n")
+    print(md_table(rows, cols))
+    print("\n### Figure 2 analogue (geo-mean metric ratios vs Geographer; "
+          ">1 means Geographer better)\n")
+    print(md_table(ratios, ["class", "tool"] +
+                   [m + "_ratio" for m in METRICS]))
+    return out
+
+
+if __name__ == "__main__":
+    run()

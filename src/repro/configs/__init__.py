@@ -1,0 +1,59 @@
+"""Architecture config registry: one module per assigned architecture.
+
+Each module exposes ``CONFIG`` (full ModelConfig, exercised only via the
+dry-run), ``SMOKE`` (reduced same-family config for CPU tests) and
+optionally ``SHARDING_OVERRIDES`` ({mode: {logical: mesh_axes}}) and
+``LONG_CONTEXT_OK`` (bool — whether the arch is sub-quadratic enough for
+the long_500k cell).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "starcoder2_7b",
+    "phi4_mini_3p8b",
+    "phi3_mini_3p8b",
+    "gemma3_1b",
+    "musicgen_large",
+    "jamba_1p5_large_398b",
+    "llama4_maverick_400b_a17b",
+    "granite_moe_3b_a800m",
+    "rwkv6_3b",
+    "internvl2_76b",
+]
+
+# canonical CLI ids (--arch <id>)
+ALIASES = {
+    "starcoder2-7b": "starcoder2_7b",
+    "phi4-mini-3.8b": "phi4_mini_3p8b",
+    "phi3-mini-3.8b": "phi3_mini_3p8b",
+    "gemma3-1b": "gemma3_1b",
+    "musicgen-large": "musicgen_large",
+    "jamba-1.5-large-398b": "jamba_1p5_large_398b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "rwkv6-3b": "rwkv6_3b",
+    "internvl2-76b": "internvl2_76b",
+}
+
+
+def get(name: str):
+    name = ALIASES.get(name, name)
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name}; known: {sorted(ALIASES)}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str, smoke: bool = False):
+    mod = get(name)
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def long_context_ok(name: str) -> bool:
+    return getattr(get(name), "LONG_CONTEXT_OK", False)
+
+
+def sharding_overrides(name: str, mode: str) -> dict:
+    ov = getattr(get(name), "SHARDING_OVERRIDES", {})
+    return dict(ov.get("all", {}), **ov.get(mode, {}))

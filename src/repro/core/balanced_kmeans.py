@@ -1,0 +1,263 @@
+"""Weighted balanced k-means (paper Section 4) — fully jittable core.
+
+Faithful to Algorithms 1 + 2 with the following TPU/JAX adaptations
+(recorded in DESIGN.md §4):
+
+* Effective distances are computed in *squared* space:
+  minimizing dist/influence is equivalent to minimizing sqdist/influence².
+  Bounds (ub/lb) are kept in true effective-distance space (a sqrt of the
+  per-point best/second values only, never of the full n×k matrix).
+* The paper's per-point Hamerly skip (`if ub < lb`) is a scalar-CPU
+  optimization; the vectorized path uses it for assignment semantics and to
+  report the skip statistic, while the Pallas kernel path uses *tile-level*
+  pruning for real savings (kernels/assign_kernel.py).
+* Two sign typos in the paper are corrected (both confirmed against
+  Hamerly 2010 and the paper's own derivations):
+    - Eq. (1): ``influence /= gamma^(1/d)`` must be ``influence *=
+      gamma^(1/d)`` so that oversized clusters (gamma < 1) *lose* influence
+      and the derived new size equals gamma * size_old = target.
+    - Eqs. (4)/(5): bound *relaxation* must widen the bounds:
+      ``ub += delta/influence`` and ``lb -= max_c delta(c)/influence(c)``.
+* Sampled warm-up (paper §4.5 "random initialization") is implemented with
+  a traced sample length and weight masking so shapes stay static.
+
+The same code runs single-device or under ``shard_map`` (pass ``axis_name``)
+— cluster centers and influence are replicated, points are sharded, and the
+only communication is global vector sums (paper §4.1), exactly the psums
+emitted here.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BKMConfig:
+    k: int
+    epsilon: float = 0.03          # max imbalance (paper uses 0.03/0.05)
+    max_iter: int = 30             # center-movement iterations (Alg. 2)
+    max_balance_iter: int = 12     # balance iterations per movement (Alg. 1)
+    influence_clip: float = 0.05   # max 5% influence change per step (paper)
+    d_eff: int | None = None       # dimension in Eq. (1); default spatial d
+    erosion: bool = True           # Eqs. (2)-(3)
+    delta_tol: float = 5e-4        # movement threshold x bbox diagonal
+    warmup: bool = True            # sampled warm-up rounds
+    warmup_start: int = 100
+    use_kernel: bool = False       # Pallas assignment kernel
+    block_p: int = 1024            # kernel point-tile
+    block_c: int = 128             # kernel center-tile
+    assign_chunk: int = 65536      # jnp path: point chunk to bound n*k memory
+    dtype: Any = jnp.float32
+
+
+def _reduce(x, axis_name, op="sum"):
+    if axis_name is None:
+        return x
+    if op == "sum":
+        return jax.lax.psum(x, axis_name)
+    if op == "max":
+        return jax.lax.pmax(x, axis_name)
+    if op == "min":
+        return jax.lax.pmin(x, axis_name)
+    raise ValueError(op)
+
+
+def assign_effective(points, centers, influence, chunk=65536, use_kernel=False,
+                     block_p=1024, block_c=128):
+    """Returns (assignment [n] int32, best_eff [n], second_eff [n]) where
+    best/second are *true* effective distances dist/influence."""
+    if use_kernel:
+        from repro.kernels.ops import assign_argmin
+        idx, best_sq, second_sq = assign_argmin(
+            points, centers, influence, block_p=block_p, block_c=block_c)
+        return idx, jnp.sqrt(best_sq), jnp.sqrt(second_sq)
+    inv2 = 1.0 / (influence * influence)
+    cn = jnp.sum(centers * centers, axis=1)
+
+    def one_chunk(p):
+        pn = jnp.sum(p * p, axis=1, keepdims=True)
+        sq = pn + cn[None, :] - 2.0 * p @ centers.T
+        eff = jnp.maximum(sq, 0.0) * inv2[None, :]
+        idx = jnp.argmin(eff, axis=1).astype(jnp.int32)
+        best = jnp.take_along_axis(eff, idx[:, None], axis=1)[:, 0]
+        masked = eff.at[jnp.arange(p.shape[0]), idx].set(jnp.inf)
+        second = jnp.min(masked, axis=1)
+        return idx, best, second
+
+    n = points.shape[0]
+    if n <= chunk:
+        idx, b, s = one_chunk(points)
+    else:
+        pad = (-n) % chunk
+        pts = jnp.pad(points, ((0, pad), (0, 0)))
+        pts = pts.reshape(-1, chunk, points.shape[1])
+        idx, b, s = jax.lax.map(one_chunk, pts)
+        idx, b, s = idx.reshape(-1)[:n], b.reshape(-1)[:n], s.reshape(-1)[:n]
+    return idx, jnp.sqrt(b), jnp.sqrt(jnp.where(jnp.isfinite(s), s, b))
+
+
+def adapt_influence(influence, sizes, target, d_eff, clip):
+    """Paper Eq. (1), sign-corrected; oversized clusters lose influence."""
+    gamma = target / jnp.maximum(sizes, 1e-12)
+    factor = jnp.clip(gamma ** (1.0 / d_eff), 1.0 - clip, 1.0 + clip)
+    return influence * factor, factor
+
+
+def erode_influence(influence, delta, beta):
+    """Paper Eqs. (2)-(3): sigmoid regression of influence toward 1."""
+    alpha = 2.0 / (1.0 + jnp.exp(-delta / jnp.maximum(beta, 1e-12))) - 1.0
+    return jnp.exp((1.0 - alpha) * jnp.log(jnp.maximum(influence, 1e-12)))
+
+
+def assign_and_balance(points, w_eff, centers, influence, A_old, ub, lb, cfg,
+                       target_weight, axis_name=None):
+    """Algorithm 1. Returns (A, influence, ub, lb, sizes, stats).
+
+    ``w_eff`` already includes the warm-up sample mask. ``target_weight`` is
+    the global per-cluster target (psum'd by the caller).
+    """
+    d_eff = cfg.d_eff or points.shape[1]
+
+    def body(carry):
+        i, A, ub_c, lb_c, infl, _, _, skips = carry
+        idx, best, second = assign_effective(
+            points, centers, infl, cfg.assign_chunk, cfg.use_kernel,
+            cfg.block_p, cfg.block_c)
+        skip = ub_c < lb_c                       # Hamerly test (sound bounds)
+        A_new = jnp.where(skip, A, idx)
+        ub_n = jnp.where(skip, ub_c, best)
+        lb_n = jnp.where(skip, lb_c, second)
+        sizes = jax.ops.segment_sum(w_eff, A_new, num_segments=cfg.k)
+        sizes = _reduce(sizes, axis_name)
+        imb = jnp.max(sizes) / target_weight - 1.0
+        done = imb <= cfg.epsilon
+        infl_new, factor = adapt_influence(infl, sizes, target_weight,
+                                           d_eff, cfg.influence_clip)
+        infl_new = jnp.where(done, infl, infl_new)
+        # Bound relaxation for the influence change: effdist scales exactly
+        # by I_old/I_new per cluster (movement delta is zero inside Alg. 1).
+        ratio = infl / infl_new                  # = 1/factor
+        ub_n = ub_n * jnp.where(done, 1.0, ratio[A_new])
+        lb_n = lb_n * jnp.where(done, 1.0, jnp.min(ratio))
+        skips = skips + jnp.sum(skip.astype(jnp.float32))
+        return i + 1, A_new, ub_n, lb_n, infl_new, sizes, done, skips
+
+    def cond(carry):
+        i, *_, done, _ = carry
+        return (i < cfg.max_balance_iter) & (~done)
+
+    init = (jnp.int32(0), A_old, ub, lb, influence,
+            jnp.zeros(cfg.k, cfg.dtype), jnp.bool_(False), jnp.float32(0.0))
+    i, A, ub, lb, infl, sizes, done, skips = jax.lax.while_loop(cond, body, init)
+    stats = {"balance_iters": i, "balanced": done,
+             "skip_fraction": skips / (jnp.maximum(i, 1) * points.shape[0])}
+    return A, infl, ub, lb, sizes, stats
+
+
+def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
+                    axis_name=None, n_global=None):
+    """Algorithm 2 (minus the SFC sort, done by the caller/partitioner).
+
+    ``points`` are the (local shard of) points, *already permuted randomly*
+    if warm-up is enabled. ``centers0`` must be identical on all shards.
+    Returns (assignment, centers, influence, stats).
+    """
+    n, d = points.shape
+    k = cfg.k
+    dtype = cfg.dtype
+    points = points.astype(dtype)
+    w = jnp.ones(n, dtype) if weights is None else weights.astype(dtype)
+    if centers0 is None:
+        centers0 = points[jnp.linspace(0, n - 1, k).astype(jnp.int32)]
+    if n_global is None:
+        n_global = n * (1 if axis_name is None else
+                        jax.lax.psum(1, axis_name))
+
+    total_w = _reduce(jnp.sum(w), axis_name)
+    lo = _reduce(jnp.min(points, axis=0), axis_name, "min")
+    hi = _reduce(jnp.max(points, axis=0), axis_name, "max")
+    diag = jnp.sqrt(jnp.sum((hi - lo) ** 2))
+    delta_threshold = cfg.delta_tol * diag
+
+    n_warm = int(np.ceil(np.log2(max(int(n_global) / cfg.warmup_start, 1)))) \
+        if cfg.warmup else 0
+
+    def sample_mask(it):
+        if not cfg.warmup:
+            return jnp.ones(n, dtype)
+        # sample size doubles per round; local prefix of the permutation
+        frac = jnp.minimum((cfg.warmup_start * 2.0 ** it) / n_global, 1.0)
+        s_local = jnp.ceil(frac * n).astype(jnp.int32)
+        return (jnp.arange(n) < s_local).astype(dtype)
+
+    hist_len = cfg.max_iter
+
+    def body(carry):
+        (it, centers, infl, A, ub, lb, _, hist) = carry
+        mask = sample_mask(it)
+        w_eff = w * mask
+        target = jnp.maximum(_reduce(jnp.sum(w_eff), axis_name), 1e-12) / k
+        A, infl, ub, lb, sizes, st = assign_and_balance(
+            points, w_eff, centers, infl, A, ub, lb, cfg, target, axis_name)
+        # --- movement phase (Alg. 2 lines 12-13): two global vector sums
+        wm = w_eff[:, None] * points
+        csum = jax.ops.segment_sum(wm, A, num_segments=k)
+        cw = jax.ops.segment_sum(w_eff, A, num_segments=k)
+        csum = _reduce(csum, axis_name)
+        cw = _reduce(cw, axis_name)
+        new_centers = jnp.where(cw[:, None] > 0, csum / jnp.maximum(cw, 1e-12)[:, None],
+                                centers)
+        delta = jnp.sqrt(jnp.sum((new_centers - centers) ** 2, axis=1))
+        # --- influence erosion (Eqs. 2-3); beta = avg cluster diameter proxy
+        best_true = ub * infl[A]                 # true distance upper bound
+        rad2 = jax.ops.segment_sum(w_eff * best_true ** 2, A, num_segments=k)
+        rad2 = _reduce(rad2, axis_name) / jnp.maximum(cw, 1e-12)
+        beta = 2.0 * jnp.mean(jnp.sqrt(jnp.maximum(rad2, 0.0)))
+        infl_new = erode_influence(infl, delta, beta) if cfg.erosion else infl
+        # --- bound relaxation for movement + erosion (Eqs. 4-5, corrected)
+        ratio = infl / infl_new
+        ub = ub * ratio[A] + delta[A] / infl_new[A]
+        lb = jnp.maximum(lb * jnp.min(ratio) - jnp.max(delta / infl_new), 0.0)
+        max_delta = jnp.max(delta)
+        updates = {"skip_fraction": st["skip_fraction"],
+                   "balance_iters": st["balance_iters"].astype(jnp.float32),
+                   "max_delta": max_delta,
+                   "imbalance": jnp.max(sizes) / target - 1.0}
+        hist = {name: hist[name].at[it].set(updates[name]) for name in hist}
+        return (it + 1, new_centers, infl_new, A, ub, lb, max_delta, hist)
+
+    def cond(carry):
+        it = carry[0]
+        max_delta = carry[6]
+        in_warm = it < n_warm
+        return (it < cfg.max_iter) & (in_warm | (max_delta > delta_threshold))
+
+    hist0 = {name: jnp.zeros(hist_len, jnp.float32)
+             for name in ["skip_fraction", "balance_iters", "max_delta", "imbalance"]}
+    init = (jnp.int32(0), centers0.astype(dtype), jnp.ones(k, dtype),
+            jnp.zeros(n, jnp.int32), jnp.full(n, jnp.inf, dtype),
+            jnp.zeros(n, dtype), jnp.array(jnp.inf, dtype), hist0)
+    it, centers, infl, A, ub, lb, _, hist = jax.lax.while_loop(cond, body, init)
+
+    # final full assignment + balance pass on ALL points (mask = 1) so the
+    # returned assignment is exact and balanced even if warm-up dominated
+    target = total_w / k
+    A, infl, ub, lb, sizes, st = assign_and_balance(
+        points, w, centers, infl, A,
+        jnp.full(n, jnp.inf, dtype), jnp.zeros(n, dtype), cfg, target, axis_name)
+    stats = {"iters": it, "final_sizes": sizes,
+             "final_imbalance": jnp.max(sizes) / target - 1.0,
+             "final_balance_iters": st["balance_iters"],
+             "skip_fraction_final": st["skip_fraction"], "history": hist}
+    return A, centers, infl, stats
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def balanced_kmeans_jit(points, cfg: BKMConfig, weights=None, centers0=None):
+    return balanced_kmeans(points, cfg, weights, centers0)

@@ -1,0 +1,144 @@
+"""Partition quality metrics (paper Section 2).
+
+* edge cut          — #edges with endpoints in different blocks
+* comm volume       — per block V_i: sum over v in V_i of the number of
+                      *other* blocks containing a neighbor of v; we report
+                      max and total over blocks (maxCommVol / sum CommVol)
+* imbalance         — max block weight / ceil(total/k) - 1
+* diameter          — per-block graph diameter lower bound via a few rounds
+                      of double-sweep BFS (iFUB-style, paper §5.2.4)
+
+All metrics operate on CSR numpy graphs (see meshes.Mesh).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def imbalance(part: np.ndarray, k: int, weights: np.ndarray | None = None) -> float:
+    if weights is None:
+        sizes = np.bincount(part, minlength=k).astype(np.float64)
+        target = np.ceil(part.shape[0] / k)
+    else:
+        sizes = np.bincount(part, weights=weights, minlength=k)
+        target = weights.sum() / k
+    return float(sizes.max() / target - 1.0)
+
+
+def block_sizes(part: np.ndarray, k: int, weights: np.ndarray | None = None) -> np.ndarray:
+    if weights is None:
+        return np.bincount(part, minlength=k).astype(np.float64)
+    return np.bincount(part, weights=weights, minlength=k)
+
+
+def edge_cut(part: np.ndarray, indptr: np.ndarray, indices: np.ndarray) -> int:
+    src = np.repeat(np.arange(len(indptr) - 1), np.diff(indptr))
+    return int((part[src] != part[indices]).sum() // 2)
+
+
+def comm_volume(part: np.ndarray, indptr: np.ndarray, indices: np.ndarray,
+                k: int) -> tuple[int, int, np.ndarray]:
+    """Returns (max_comm, total_comm, per_block_comm).
+
+    comm(V_i) = sum_{v in V_i} #{distinct blocks j != part(v) adjacent to v}.
+    """
+    n = len(indptr) - 1
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    nb_block = part[indices]
+    # distinct (v, remote block) pairs
+    remote = nb_block != part[src]
+    key = src[remote].astype(np.int64) * np.int64(k) + nb_block[remote]
+    uniq = np.unique(key)
+    v = (uniq // k).astype(np.int64)
+    per_block = np.bincount(part[v], minlength=k)
+    return int(per_block.max(initial=0)), int(per_block.sum()), per_block
+
+
+def _bfs_ecc(indptr: np.ndarray, indices: np.ndarray, sub: np.ndarray,
+             start: int) -> tuple[int, int]:
+    """BFS inside vertex subset ``sub`` (bool mask). Returns (ecc, farthest)."""
+    n = len(indptr) - 1
+    dist = np.full(n, -1, dtype=np.int64)
+    dist[start] = 0
+    frontier = np.array([start], dtype=np.int64)
+    d = 0
+    last = start
+    while frontier.size:
+        nxt = []
+        for u in frontier:
+            nbrs = indices[indptr[u]:indptr[u + 1]]
+            nbrs = nbrs[sub[nbrs] & (dist[nbrs] < 0)]
+            dist[nbrs] = d + 1
+            nxt.append(nbrs)
+        frontier = np.concatenate(nxt) if nxt else np.zeros(0, np.int64)
+        if frontier.size:
+            d += 1
+            last = int(frontier[-1])
+    return d, last
+
+
+def block_diameters(part: np.ndarray, indptr: np.ndarray, indices: np.ndarray,
+                    k: int, rounds: int = 3) -> np.ndarray:
+    """Double-sweep BFS lower bound on each block's diameter.
+
+    Disconnected blocks get +inf (paper aggregates with harmonic mean to
+    absorb these)."""
+    n = len(indptr) - 1
+    diams = np.zeros(k, dtype=np.float64)
+    for b in range(k):
+        members = np.where(part == b)[0]
+        if members.size == 0:
+            continue
+        sub = np.zeros(n, dtype=bool)
+        sub[members] = True
+        start = int(members[0])
+        best = 0
+        cur = start
+        reached, _ = _bfs_ecc(indptr, indices, sub, start)
+        # connectivity check: count reachable
+        for _ in range(rounds):
+            ecc, far = _bfs_ecc(indptr, indices, sub, cur)
+            best = max(best, ecc)
+            cur = far
+        # disconnected?
+        dist = np.full(n, -1, dtype=np.int64)
+        dist[start] = 0
+        frontier = [start]
+        cnt = 1
+        while frontier:
+            nf = []
+            for u in frontier:
+                nbrs = indices[indptr[u]:indptr[u + 1]]
+                nbrs = nbrs[sub[nbrs] & (dist[nbrs] < 0)]
+                dist[nbrs] = 1
+                cnt += nbrs.size
+                nf.extend(nbrs.tolist())
+            frontier = nf
+        diams[b] = best if cnt == members.size else np.inf
+    return diams
+
+
+def harmonic_mean(x: np.ndarray) -> float:
+    x = np.asarray(x, dtype=np.float64)
+    x = x[x > 0]
+    if x.size == 0:
+        return 0.0
+    return float(x.size / np.sum(1.0 / x))
+
+
+def evaluate_partition(mesh, part: np.ndarray, k: int,
+                       with_diameter: bool = False) -> dict:
+    part = np.asarray(part)
+    maxc, totc, _ = comm_volume(part, mesh.indptr, mesh.indices, k)
+    out = {
+        "cut": edge_cut(part, mesh.indptr, mesh.indices),
+        "maxCommVol": maxc,
+        "totalCommVol": totc,
+        "imbalance": imbalance(part, k, mesh.weights),
+        "n_blocks_used": int(len(np.unique(part))),
+    }
+    if with_diameter:
+        d = block_diameters(part, mesh.indptr, mesh.indices, k)
+        out["diameter_harmonic_mean"] = harmonic_mean(d[np.isfinite(d)])
+        out["n_disconnected"] = int(np.sum(~np.isfinite(d)))
+    return out

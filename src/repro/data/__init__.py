@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLM, Prefetcher, sfc_batch_order

@@ -1,0 +1,118 @@
+"""Jit'd wrappers around the Pallas kernels.
+
+``assign_argmin`` handles padding, center sorting by bounding-box distance
+(paper Alg. 1 line 6) and tile-bound precomputation, then dispatches to the
+Pallas kernel. On this CPU container the kernel always runs in interpret
+mode; on real TPUs set ``REPRO_PALLAS_INTERPRET=0``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .assign_kernel import assign_argmin_pallas
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+_FAR = 1e30   # padded-center coordinate; effective distance ~1e60, never wins
+
+
+def _tile_bounds(points, centers, inv2, block_p, block_c):
+    """Lower bound of effective sqdist between each point-tile's bbox and
+    each center tile: max(0, bbox-distance)^2 * max tile inv2."""
+    n, d = points.shape
+    k = centers.shape[0]
+    pt = points.reshape(n // block_p, block_p, d)
+    lo = jnp.min(pt, axis=1)                       # [nPT, d]
+    hi = jnp.max(pt, axis=1)
+    ct = centers.reshape(k // block_c, block_c, d)  # [nCT, BC, d]
+    # distance of each center to each tile bbox
+    cexp = ct[None]                                 # [1, nCT, BC, d]
+    gap = jnp.maximum(jnp.maximum(lo[:, None, None, :] - cexp,
+                                  cexp - hi[:, None, None, :]), 0.0)
+    d2 = jnp.sum(gap * gap, axis=-1)                # [nPT, nCT, BC]
+    inv2_t = inv2.reshape(k // block_c, block_c)    # [nCT, BC]
+    eff = d2 * inv2_t[None]                         # per-center bound
+    return jnp.min(eff, axis=-1)                    # [nPT, nCT]
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "block_c"))
+def assign_argmin(points, centers, influence, block_p: int = 1024,
+                  block_c: int = 128):
+    """Drop-in replacement for ref.assign_argmin_ref (same returns)."""
+    n, d = points.shape
+    k = centers.shape[0]
+    inv2 = 1.0 / (influence * influence)
+
+    # sort centers by effective distance to the global point bbox so that
+    # prunable center tiles appear late in the sequential grid dimension
+    lo = jnp.min(points, axis=0)
+    hi = jnp.max(points, axis=0)
+    gap = jnp.maximum(jnp.maximum(lo[None] - centers, centers - hi[None]), 0.0)
+    key = jnp.sum(gap * gap, axis=1) * inv2
+    order = jnp.argsort(key)
+    centers_s = centers[order]
+    inv2_s = inv2[order]
+
+    pad_n = (-n) % block_p
+    pad_k = (-k) % block_c
+    pts = jnp.pad(points, ((0, pad_n), (0, 0))).astype(jnp.float32)
+    cts = jnp.pad(centers_s, ((0, pad_k), (0, 0)),
+                  constant_values=_FAR).astype(jnp.float32)
+    iv2 = jnp.pad(inv2_s, (0, pad_k), constant_values=1.0).astype(jnp.float32)
+
+    bounds = _tile_bounds(pts, cts, iv2, block_p, block_c)
+    idx_s, best, second = assign_argmin_pallas(
+        pts, cts, iv2, bounds, block_p=block_p, block_c=block_c,
+        interpret=_INTERPRET)
+    idx_s, best, second = idx_s[:n], best[:n], second[:n]
+    # map sorted-center index back to the original center id
+    idx = order[jnp.clip(idx_s, 0, k - 1)].astype(jnp.int32)
+    return idx, best, second
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "softcap"))
+def flash_attention(q, k, v, bq: int = 512, bk: int = 512,
+                    softcap: float = 0.0):
+    """Causal flash attention. q: [B, S, H, dh], k/v: [B, S, KV, dh]
+    (H % KV == 0). Pads S to the tile size; padded keys sit above the
+    causal diagonal of every real query, so no extra masking is needed.
+    Returns [B, S, H, dh]."""
+    from .flash_attention import flash_attention_pallas
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    bq = min(bq, max(128, 1 << (S - 1).bit_length()))
+    bk = min(bk, bq)
+    pad = (-S) % max(bq, bk)
+    qt = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kt = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vt = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    qh = qt.transpose(0, 2, 1, 3).reshape(B * H, Sp, dh)
+    kh = kt.transpose(0, 2, 1, 3).reshape(B * KV, Sp, dh)
+    vh = vt.transpose(0, 2, 1, 3).reshape(B * KV, Sp, dh)
+    o = flash_attention_pallas(qh, kh, vh, bq=bq, bk=bk, softcap=softcap,
+                               interpret=_INTERPRET)
+    o = o.reshape(B, H, Sp, dh).transpose(0, 2, 1, 3)
+    return o[:, :S]
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "bt"))
+def router_topk(x, centroids, influence, top_k: int, bt: int = 256):
+    """Fused balanced-k-means MoE routing. x: [T, D], centroids: [E, D],
+    influence: [E]. Returns (idx [T, top_k], eff [T, top_k])."""
+    from .moe_router_kernel import router_topk_pallas
+    T, D = x.shape
+    E = centroids.shape[0]
+    inv2 = 1.0 / (influence * influence)
+    pad_t = (-T) % bt
+    pad_e = (-E) % 128
+    xp = jnp.pad(x, ((0, pad_t), (0, 0))).astype(jnp.float32)
+    cp = jnp.pad(centroids, ((0, pad_e), (0, 0)),
+                 constant_values=_FAR).astype(jnp.float32)
+    ip = jnp.pad(inv2, (0, pad_e), constant_values=1.0).astype(jnp.float32)
+    idx, eff = router_topk_pallas(xp, cp, ip, top_k=top_k, bt=bt,
+                                  interpret=_INTERPRET)
+    return idx[:T], eff[:T]

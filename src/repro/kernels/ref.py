@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def assign_argmin_ref(points, centers, influence):
+    """Effective-distance argmin (paper Alg. 1 inner loop), dense oracle.
+
+    Returns (idx [n] int32, best_eff_sq [n], second_eff_sq [n]) where
+    eff_sq = squared-distance / influence^2 (monotone in dist/influence).
+    """
+    inv2 = 1.0 / (influence * influence)
+    pn = jnp.sum(points * points, axis=1, keepdims=True)
+    cn = jnp.sum(centers * centers, axis=1)
+    sq = jnp.maximum(pn + cn[None, :] - 2.0 * points @ centers.T, 0.0)
+    eff = sq * inv2[None, :]
+    idx = jnp.argmin(eff, axis=1).astype(jnp.int32)
+    best = jnp.take_along_axis(eff, idx[:, None], axis=1)[:, 0]
+    masked = eff.at[jnp.arange(points.shape[0]), idx].set(jnp.inf)
+    second = jnp.min(masked, axis=1)
+    return idx, best, second
+
+
+def center_update_ref(points, weights, assignment, k):
+    """Weighted per-cluster sums (movement phase oracle).
+
+    Returns (wsum [k, d], wcount [k])."""
+    import jax
+    wsum = jax.ops.segment_sum(weights[:, None] * points, assignment,
+                               num_segments=k)
+    wcount = jax.ops.segment_sum(weights, assignment, num_segments=k)
+    return wsum, wcount
+
+
+def flash_attention_ref(q, k, v, softcap: float = 0.0):
+    """Dense causal attention oracle. q: [BH, S, dh], k/v: [BKV, S, dh]
+    with BH % BKV == 0 (GQA). Returns [BH, S, dh] in q.dtype."""
+    import jax
+    BH, S, dh = q.shape
+    BKV = k.shape[0]
+    G = BH // BKV
+    kx = jnp.repeat(k, G, axis=0).astype(jnp.float32)
+    vx = jnp.repeat(v, G, axis=0).astype(jnp.float32)
+    s = jnp.einsum("hqd,htd->hqt", q.astype(jnp.float32), kx) * (dh ** -0.5)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqt,htd->hqd", p, vx).astype(q.dtype)
+
+
+def router_topk_ref(x, centroids, inv2, top_k: int):
+    """Balanced-k-means router oracle: top-k smallest effective sq-dists.
+    Returns (idx [T, k] int32, eff [T, k] f32) in ascending-eff order."""
+    import jax
+    xf = x.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    xn = jnp.sum(xf * xf, axis=1, keepdims=True)
+    cn = jnp.sum(c * c, axis=1)[None, :]
+    eff = jnp.maximum(xn + cn - 2.0 * xf @ c.T, 0.0) * inv2[None, :]
+    neg, idx = jax.lax.top_k(-eff, top_k)
+    return idx.astype(jnp.int32), -neg

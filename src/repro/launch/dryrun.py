@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The 512 placeholder host devices exist ONLY inside this module's process;
+# tests/benches import nothing from here and see 1 device.
+#
+# LICM would hoist whole-stack f32 converts of bf16 parameters out of the
+# scan-over-layers while loop (the CPU backend lowers bf16 dots via f32
+# converts; TPU MXUs consume bf16 natively, so the hoisted stacks are a
+# pure CPU-lowering artifact that inflates the memory fit-check by tens of
+# GB). Disable the motion passes for faithful TPU-side accounting.
+os.environ["XLA_FLAGS"] += (
+    " --xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+    "while-loop-expensive-invariant-code-motion")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this module:
+
+1. compiles the FULL-depth scanned program on the requested mesh —
+   ``memory_analysis()`` is the HBM fit-check and the compile itself proves
+   the sharding is coherent (no GSPMD errors, all collectives lowered);
+2. (single-pod only) compiles python-unrolled programs at depth = 1x and
+   2x the layer pattern period and extrapolates FLOPs / bytes / collective
+   wire bytes exactly to the full depth:
+       f(L) = f(g) + (L/g - 1) * (f(2g) - f(g))
+   — necessary because ``cost_analysis()`` counts a ``lax.scan`` body once
+   (verified), and sufficient because cost is affine in the repeat count;
+3. derives the three roofline terms (launch/roofline.py) and writes one
+   JSON record per cell.
+
+Usage:
+    python -m repro.launch.dryrun --arch starcoder2-7b --shape train_4k \
+        --mesh single --out results/dryrun/sc2_train_single.json
+    python -m repro.launch.dryrun --all --mesh both --out-dir results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.dist.rules import resolve_rules, param_shardings
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, batch_logical_specs, input_specs
+from repro.models import model as M
+from repro.serve.engine import make_serve_step
+from repro.train.step import (TrainHParams, abstract_train_state,
+                              make_train_step, train_state_logical_specs)
+
+HBM_PER_CHIP = 16 * 1024 ** 3      # v5e
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool,
+               n_layers: int | None = None, unroll: bool = False,
+               hp: TrainHParams | None = None, overrides: dict | None = None,
+               cfg_overrides: dict | None = None):
+    """Lower one cell. Returns (lowered, meta)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = configs.get_config(arch)
+    if cfg_overrides:
+        cfg = replace(cfg, **cfg_overrides)
+    if n_layers is not None:
+        cfg = replace(cfg, n_layers=n_layers)
+    cell = SHAPES[shape]
+    ov = dict(configs.sharding_overrides(arch, cell.mode))
+    if overrides:
+        ov.update(overrides)
+    rules = resolve_rules(mesh, cfg, cell.mode, batch_size=cell.batch,
+                          overrides=ov)
+    batch = input_specs(cfg, cell)
+    bshard = {k: rules.sharding(v)
+              for k, v in batch_logical_specs(cfg, cell).items()}
+    meta = {"arch": arch, "shape": shape, "mode": cell.mode,
+            "batch": cell.batch, "seq": cell.seq,
+            "mesh": "multi" if multi_pod else "single",
+            "n_devices": mesh.devices.size, "n_layers": cfg.n_layers}
+
+    if cell.mode == "train":
+        if hp is None:
+            arch_hp = dict(getattr(configs.get(arch), "TRAIN_HPARAMS", {}))
+            hp = TrainHParams(remat=True, **arch_hp)
+        hp = replace(hp, unroll=unroll)
+        state = abstract_train_state(cfg, hp)
+        sshard = param_shardings(rules, train_state_logical_specs(cfg, hp))
+        fn = make_train_step(cfg, rules, hp)
+        lowered = jax.jit(fn, in_shardings=(sshard, bshard),
+                          donate_argnums=(0,)).lower(state, batch)
+    elif cell.mode == "prefill":
+        params = M.abstract_params(cfg)
+        psh = param_shardings(rules, M.param_logical_specs(cfg))
+
+        def fn(p, b):
+            return M.prefill(p, b, cfg, rules, unroll=unroll)
+        lowered = jax.jit(fn, in_shardings=(psh, bshard)).lower(params, batch)
+    else:                                   # decode / long_decode
+        params = M.abstract_params(cfg)
+        psh = param_shardings(rules, M.param_logical_specs(cfg))
+        cache = jax.eval_shape(
+            lambda: M.init_cache(cfg, cell.batch, cell.seq, rules))
+        csh = param_shardings(rules, M.cache_logical_specs(cfg))
+        key = "embeddings" if cfg.input_mode == "embeddings" else "tokens"
+        pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+        pos_sh = NamedSharding(rules.mesh, P())
+        fn = make_serve_step(cfg, rules, unroll=unroll)
+        lowered = jax.jit(fn, in_shardings=(psh, csh, bshard[key], pos_sh),
+                          donate_argnums=(1,)).lower(
+                              params, cache, batch[key], pos_spec)
+    return lowered, meta, cfg
+
+
+def memory_info(compiled) -> dict:
+    """Per-device memory accounting.
+
+    The CPU backend's ``temp_size_in_bytes`` is the *sum* of temp buffers
+    (its thunk runtime reports no liveness-based reuse), while the TPU
+    BufferAssignment reuses dead buffers — so we also compute a liveness
+    peak over the scheduled HLO (launch/hlo_mem.py). Both are upper
+    bounds on the deployment peak; the fit-check uses the tighter one.
+    """
+    from repro.launch.hlo_mem import peak_temp_bytes
+    ma = compiled.memory_analysis()
+    fields = ["argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"]
+    out = {f: int(getattr(ma, f, -1)) for f in fields}
+    try:
+        out["peak_temp_estimate"] = int(peak_temp_bytes(compiled.as_text()))
+    except Exception:
+        out["peak_temp_estimate"] = out["temp_size_in_bytes"]
+    tight_temp = min(out["temp_size_in_bytes"], out["peak_temp_estimate"])
+    live = out["argument_size_in_bytes"] + tight_temp \
+        - max(out["alias_size_in_bytes"], 0)
+    out["live_bytes"] = live
+    out["fits_hbm_16g"] = bool(live >= 0 and live <= HBM_PER_CHIP)
+    return out
+
+
+def cost_info(lowered, compiled, n_devices: int) -> dict:
+    ca = compiled.cost_analysis()
+    coll = RL.parse_collectives(compiled.as_text(), n_devices)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "wire": coll}
+
+
+def _extrap(v1: float, v2: float, reps: int) -> float:
+    return v1 + (reps - 1) * (v2 - v1)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             do_roofline: bool = True, hp: TrainHParams | None = None,
+             overrides: dict | None = None, tag: str = "",
+             cfg_overrides: dict | None = None) -> dict:
+    multi = mesh_kind == "multi"
+    rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                 "tag": tag, "ok": False}
+    if SHAPES[shape].mode == "long_decode" and not configs.long_context_ok(arch):
+        rec.update(ok=True, skipped=True,
+                   reason="pure full attention: long_500k skipped per "
+                          "assignment (see DESIGN.md Arch-applicability)")
+        return rec
+    t0 = time.perf_counter()
+    lowered, meta, cfg = build_cell(arch, shape, multi, hp=hp,
+                                    overrides=overrides,
+                                    cfg_overrides=cfg_overrides)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    rec.update(meta)
+    rec["memory"] = memory_info(compiled)
+    rec["compile_s"] = {"lower": t1 - t0, "compile": t2 - t1}
+    print(f"[{arch} x {shape} x {mesh_kind}] compiled "
+          f"({t2 - t1:.1f}s); memory_analysis:")
+    print("  " + json.dumps(rec["memory"]))
+    full_ca = compiled.cost_analysis()
+    rec["scanned_cost"] = {"flops": float(full_ca.get("flops", 0.0)),
+                           "bytes": float(full_ca.get("bytes accessed", 0.0))}
+
+    if do_roofline and not multi:
+        period = cfg.period
+        cell = SHAPES[shape]
+        infos = []
+        for mult in (1, 2):
+            lo, me, _ = build_cell(arch, shape, multi,
+                                   n_layers=mult * period, unroll=True,
+                                   hp=hp, overrides=overrides,
+                                   cfg_overrides=cfg_overrides)
+            co = lo.compile()
+            infos.append(cost_info(lo, co, me["n_devices"]))
+        reps = cfg.n_layers // period
+        flops = _extrap(infos[0]["flops"], infos[1]["flops"], reps)
+        nbytes = _extrap(infos[0]["bytes"], infos[1]["bytes"], reps)
+        wire = {k: _extrap(infos[0]["wire"][k], infos[1]["wire"][k], reps)
+                for k in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute", "total")}
+        counts = {k: [infos[0]["wire"]["counts"][k],
+                      infos[1]["wire"]["counts"][k]]
+                  for k in infos[0]["wire"]["counts"]}
+        rec["unrolled_cost"] = {"g": infos[0], "2g": infos[1]}
+        rec["cost"] = {"flops_per_dev": flops, "bytes_per_dev": nbytes,
+                       "wire_per_dev": wire, "collective_counts_g_2g": counts}
+        rec["roofline"] = RL.summarize(
+            cfg, cell.mode, cell.batch, cell.seq, meta["n_devices"],
+            flops, nbytes, wire["total"])
+        print("  cost_analysis (extrapolated to full depth): "
+              f"flops/dev={flops:.3e} bytes/dev={nbytes:.3e} "
+              f"wire/dev={wire['total']:.3e}")
+        print("  roofline: " + json.dumps(
+            {k: (f"{v:.4e}" if isinstance(v, float) else v)
+             for k, v in rec["roofline"].items()}))
+    rec["ok"] = True
+    return rec
+
+
+def cell_list():
+    cells = []
+    for arch in configs.ARCHS:
+        for shape in SHAPES:
+            cells.append((arch, shape))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--out")
+    ap.add_argument("--out-dir", default="results/dryrun")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = cell_list() if args.all else [(args.arch, args.shape)]
+    os.makedirs(args.out_dir, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            out = args.out or os.path.join(
+                args.out_dir, f"{configs.ALIASES.get(arch, arch)}"
+                f"__{shape}__{mk}.json")
+            try:
+                rec = run_cell(arch, shape, mk,
+                               do_roofline=not args.no_roofline)
+            except Exception as e:               # record, keep sweeping
+                failures += 1
+                rec = {"arch": arch, "shape": shape, "mesh": mk,
+                       "ok": False, "error": repr(e),
+                       "traceback": traceback.format_exc()}
+                print(f"[{arch} x {shape} x {mk}] FAILED: {e!r}")
+            with open(out, "w") as f:
+                json.dump(rec, f, indent=1)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Peak-memory estimation from post-optimization HLO text.
+
+The CPU backend's ``memory_analysis().temp_size_in_bytes`` is the SUM of
+all temporary buffers — its thunk runtime does not report liveness-based
+reuse — so a long chunked loop looks like it allocates every chunk at
+once. The TPU compiler's BufferAssignment reuses dead buffers, so the
+real deployment peak is the *liveness* peak, not the sum.
+
+This module replays buffer liveness over the printed (scheduled) HLO:
+
+* each instruction's output buffer goes live at its definition and dies
+  at its last use (aliasing ops — tuple/get-tuple-element/bitcast/
+  parameter — contribute zero);
+* fusions count only their root output (internal ops live in scratch);
+* ``while``/``conditional``/``call`` bodies are analyzed recursively and
+  their peak is charged while the caller instruction runs.
+
+The result is an *estimate* (we don't re-run the scheduler), but it is
+(a) an upper bound under the printed order, and (b) stable across the
+before/after comparisons the perf loop makes. Validated against
+constructed sequential/parallel programs in tests/test_hlo_mem.py.
+"""
+from __future__ import annotations
+
+import re
+
+from .roofline import _DTYPE_BYTES
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+_ALIAS_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast",
+              "after-all", "add-dependency", "partition-id", "replica-id",
+              "optimization-barrier",
+              # while carries alias their init buffers (counted at def)
+              "while"}
+_CALLED_RE = re.compile(
+    r"(?:body|condition|calls|to_apply|true_computation|false_computation)="
+    r"(%?[\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        size = _DTYPE_BYTES.get(dt)
+        if size is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * size
+    return total
+
+
+def _split_computations(hlo: str) -> dict:
+    comps: dict[str, list[str]] = {}
+    cur: list[str] | None = None
+    name = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{"
+                         r"\s*$", stripped) or \
+                re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\{\s*$", stripped)
+            if m and ("{" in stripped):
+                name = m.group(1)
+                cur = []
+                comps[name] = cur
+                if "ENTRY" in stripped:
+                    comps["__entry__"] = cur
+        else:
+            if stripped == "}":
+                cur = None
+            else:
+                cur.append(stripped)
+    return comps
+
+
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+((?:\([^=]*?\))|(?:\S+))\s+"
+    r"([\w\-]+)\(")
+
+
+def _parse_instr(line: str):
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, type_str, op = m.groups()
+    paren = line[m.end() - 1:]
+    # operand section: up to the matching close paren of the op call
+    depth = 0
+    end = 0
+    for i, ch in enumerate(paren):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operands = _OPERAND_RE.findall(paren[:end + 1])
+    rest = paren[end + 1:]
+    return name, type_str, op, operands, rest
+
+
+def _comp_peak(name: str, comps: dict, memo: dict) -> int:
+    if name in memo:
+        return memo[name]
+    memo[name] = 0                       # cycle guard
+    lines = comps.get(name, [])
+    instrs = []
+    for ln in lines:
+        p = _parse_instr(ln)
+        if p:
+            instrs.append(p)
+    size = {}
+    extra = {}
+    last_use: dict[str, int] = {}
+    for idx, (iname, type_str, op, operands, rest) in enumerate(instrs):
+        size[iname] = 0 if op in _ALIAS_OPS else _type_bytes(type_str)
+        ex = 0
+        if op != "fusion":               # fusion internals live in scratch
+            for cm in _CALLED_RE.findall(rest):
+                cm = cm.lstrip("%")
+                if cm in comps:
+                    ex += _comp_peak(cm, comps, memo)
+        mb = _BRANCHES_RE.search(rest)
+        if mb:
+            for cm in _OPERAND_RE.findall(mb.group(1)):
+                if cm in comps:
+                    ex = max(ex, _comp_peak(cm, comps, memo))
+        extra[idx] = ex
+        for opnd in operands:
+            if opnd in size:
+                last_use[opnd] = idx
+    live = 0
+    peak = 0
+    for idx, (iname, *_rest) in enumerate(instrs):
+        live += size[iname]
+        peak = max(peak, live + extra[idx])
+        for opnd, lu in list(last_use.items()):
+            if lu == idx and opnd != iname:
+                live -= size[opnd]
+                last_use.pop(opnd)
+    memo[name] = peak
+    return peak
+
+
+def peak_temp_bytes(hlo_text: str) -> int:
+    """Liveness-peak estimate of temp bytes for the entry computation."""
+    comps = _split_computations(hlo_text)
+    if "__entry__" not in comps:
+        return 0
+    memo: dict[str, int] = {}
+    # entry shares the line list object with its named key; find that name
+    entry_name = next(k for k, v in comps.items()
+                      if v is comps["__entry__"] and k != "__entry__")
+    return _comp_peak(entry_name, comps, memo)

@@ -1,0 +1,180 @@
+"""Roofline terms from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh) cell, in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = wire_bytes_per_device / ICI_bw_per_chip
+
+``cost_analysis()`` of the partitioned module is per-device, so dividing
+by per-chip peaks is exactly the spec's HLO/(chips x peak) with both sides
+divided by `chips`.
+
+Collective wire bytes are NOT in cost_analysis; we parse the
+post-optimization HLO and apply ring-algorithm wire accounting per op:
+
+    all-gather         result_bytes * (G-1)/G
+    all-reduce         2 * result_bytes * (G-1)/G     (reduce-scatter + AG)
+    reduce-scatter     operand_bytes * (G-1)/G
+    all-to-all         operand_bytes * (G-1)/G
+    collective-permute operand_bytes
+
+where G is the replica-group size parsed from the op. This is the
+per-device traffic crossing its ICI links under ring schedules.
+
+MODEL_FLOPS (the useful-work yardstick):
+
+    train:    6 * N_active * tokens  + 3 * attn_fwd
+    prefill:  2 * N_active * tokens  +     attn_fwd
+    decode:   2 * N_active * batch   +     attn_decode
+    attn_fwd = 4 * H*hd * L_attn * tokens * avg_ctx   (causal: avg_ctx=S/2,
+               swa: min(window, S/2)); ssm/rwkv state terms added analog.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (bottleneck link accounting)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+(?P<rtype>\([^)]*\)|[a-z0-9]+\[[^\]]*\]\S*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        size = _DTYPE_BYTES.get(dt)
+        if size is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * size
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)   # [n_groups, group_size]<=[N]
+    return n_devices
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> dict:
+    """Per-device wire bytes by collective kind (+ op counts)."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        rbytes = _shape_bytes(m.group("rtype"))
+        g = _group_size(line, n_devices)
+        ring = (g - 1) / g if g > 1 else 0.0
+        if op == "all-gather":
+            wire = rbytes * ring
+        elif op == "all-reduce":
+            wire = 2.0 * rbytes * ring
+        elif op == "reduce-scatter":
+            wire = rbytes * (g - 1)            # operand = result * G
+        elif op == "all-to-all":
+            wire = rbytes * ring
+        else:                                   # collective-permute
+            wire = rbytes
+        out[op] += wire
+        counts[op] += 1
+    out["total"] = sum(out.values())
+    out["counts"] = counts
+    return out
+
+
+# ---------------------------------------------------------------------------
+# model FLOPs (useful-work yardstick)
+# ---------------------------------------------------------------------------
+
+def _attn_layer_counts(cfg):
+    full = sum(1 for s in cfg.pattern if s.attn == "full") * cfg.n_repeats
+    swa = sum(1 for s in cfg.pattern if s.attn == "swa") * cfg.n_repeats
+    mamba = sum(1 for s in cfg.pattern if s.attn == "mamba") * cfg.n_repeats
+    rwkv = sum(1 for s in cfg.pattern if s.attn == "rwkv") * cfg.n_repeats
+    return full, swa, mamba, rwkv
+
+
+def model_flops(cfg, mode: str, batch: int, seq: int) -> float:
+    """Analytic useful FLOPs for one step of this cell."""
+    n_act = cfg.active_param_count()
+    # the input embedding table is a gather, not a matmul — exclude it
+    # from the 2N/6N term (the LM head stays: it is a real matmul)
+    if cfg.input_mode == "tokens":
+        n_act -= cfg.vocab_padded * cfg.d_model
+    elif cfg.input_mode == "codebooks":
+        n_act -= cfg.n_codebooks * cfg.vocab_padded * cfg.d_model
+    full, swa, mamba, rwkv = _attn_layer_counts(cfg)
+    hhd = cfg.n_heads * cfg.hd
+    di, ds = cfg.mamba_expand * cfg.d_model, cfg.mamba_d_state
+
+    if mode in ("decode", "long_decode"):
+        toks = batch
+        ctx_full, ctx_swa = seq, min(cfg.window, seq)
+    else:
+        toks = batch * seq
+        ctx_full, ctx_swa = seq / 2.0, min(cfg.window, seq / 2.0)
+
+    attn_fwd = 4.0 * hhd * toks * (full * ctx_full + swa * ctx_swa)
+    ssm_fwd = toks * (mamba * 12.0 * di * ds + rwkv * 6.0 *
+                      cfg.d_model * cfg.rwkv_head_dim)
+    if mode == "train":
+        return 6.0 * n_act * toks + 3.0 * (attn_fwd + ssm_fwd)
+    return 2.0 * n_act * toks + attn_fwd + ssm_fwd
+
+
+def three_terms(flops_per_dev: float, bytes_per_dev: float,
+                wire_bytes_per_dev: float) -> dict:
+    compute = flops_per_dev / PEAK_FLOPS
+    memory = bytes_per_dev / HBM_BW
+    collective = wire_bytes_per_dev / ICI_BW
+    bound = max(compute, memory, collective)
+    name = ("compute" if bound == compute else
+            "memory" if bound == memory else "collective")
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "bound_s": bound,
+            "bottleneck": name}
+
+
+def summarize(cfg, mode, batch, seq, n_devices,
+              flops_per_dev, bytes_per_dev, wire_per_dev) -> dict:
+    terms = three_terms(flops_per_dev, bytes_per_dev, wire_per_dev)
+    mf = model_flops(cfg, mode, batch, seq)
+    mf_per_dev = mf / n_devices
+    useful_s = mf_per_dev / PEAK_FLOPS
+    terms.update({
+        "model_flops": mf,
+        "hlo_flops_per_dev": flops_per_dev,
+        "hlo_bytes_per_dev": bytes_per_dev,
+        "wire_bytes_per_dev": wire_per_dev,
+        "useful_ratio": mf_per_dev / max(flops_per_dev, 1.0),
+        "roofline_frac": useful_s / max(terms["bound_s"], 1e-30),
+    })
+    return terms

@@ -1,0 +1,60 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the reduced (smoke) config by default so the driver is exercisable on
+CPU; ``--full`` selects the production config (requires a real mesh of
+adequate size). Checkpoints/resume via repro.ckpt; see examples/ for
+ready-made scenarios.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro import configs
+from repro.data.pipeline import SyntheticLM
+from repro.dist.rules import resolve_rules
+from repro.launch.mesh import make_host_mesh
+from repro.train import Trainer, TrainerConfig, TrainHParams
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--full", action="store_true",
+                    help="production config (default: smoke config)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-compress", default="none",
+                    choices=["none", "bf16", "int8"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--data-parallel", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch, smoke=not args.full)
+    mesh = make_host_mesh(args.data_parallel, args.model_parallel)
+    rules = resolve_rules(mesh, cfg, "train", batch_size=args.batch,
+                          overrides=configs.sharding_overrides(
+                              args.arch, "train"))
+    hp = TrainHParams(microbatches=args.microbatches,
+                      lr_peak=args.lr, warmup_steps=max(args.steps // 10, 1),
+                      total_steps=args.steps,
+                      grad_compress=args.grad_compress)
+    tc = TrainerConfig(steps=args.steps, log_every=args.log_every,
+                       ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(cfg, rules, hp, tc)
+    data = SyntheticLM(cfg, args.batch, args.seq)
+    _, history = trainer.fit(iter(data))
+    print(json.dumps(history[-3:], indent=1))
+    print(f"final loss: {history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,305 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA/SWA attention, MLP.
+
+All modules follow the same convention:
+
+* ``<mod>_params(cfg, create, ...)`` builds the parameter subtree through a
+  ``create(shape, logical_axes, scale)`` callback — the same structure code
+  serves init / abstract-eval / logical-spec extraction (models/model.py).
+* ``<mod>_apply(params, x, ..., rules)`` is the pure forward function;
+  ``rules`` carries the logical->mesh sharding table (dist/rules.py).
+
+Attention supports three modes: full causal, sliding-window (gemma3), and
+single-token decode against a KV cache (sequence- or batch-sharded).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm_params(d, create):
+    return {"scale": create((d,), ("nil",), 0.0, init="ones")}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    # square in the activation dtype, accumulate in f32: no f32 image of x
+    # exists anywhere in the graph — with remat + scanned layers, any f32
+    # cast of x gets stashed per layer next to the bf16 residual stack and
+    # triples activation memory (DESIGN.md §5b). bf16 squaring costs ~2^-8
+    # relative variance error, ~0.2% on the normalizer.
+    var = jnp.mean(jnp.square(x).astype(jnp.float32), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """x: [..., S, H, dh]; positions: [S] or scalar broadcastable."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [S, half]
+    cos = jnp.cos(angles)[..., None, :]   # [S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def attention_params(cfg, create, kind="full"):
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "wq": create((d, cfg.n_heads, hd), ("embed", "heads", "head_dim"),
+                     d ** -0.5),
+        "wk": create((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"),
+                     d ** -0.5),
+        "wv": create((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"),
+                     d ** -0.5),
+        "wo": create((cfg.n_heads, hd, d), ("heads", "head_dim", "embed"),
+                     (cfg.n_heads * hd) ** -0.5),
+    }
+
+
+def _gqa_scores(q, k, cfg):
+    """q: [B,S,H,dh], k: [B,T,KV,dh] -> scores [B,KV,H/KV,S,T] (f32)."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    q = q.reshape(B, S, KV, H // KV, dh)
+    s = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                   preferred_element_type=jnp.float32)
+    return s * (dh ** -0.5)
+
+
+# sequences >= this use the chunked (flash-style) paths: the dense S x T
+# score matrix at S=4096+ would not fit HBM. On real TPUs the Pallas flash
+# kernel (repro/kernels/flash_attention) replaces the inner chunk compute;
+# the pure-JAX chunked path below is the portable/dry-run implementation
+# with identical math (online softmax over KV chunks).
+FLASH_S_MIN = 4096
+_QC = 2048     # query chunk (triangular skipping; head-TP archs only)
+_KVC = 2048    # key/value chunk
+
+
+def _flash_full(q, k, v, cfg, rules, unroll_chunks: bool = False):
+    """Causal full attention, online softmax over KV chunks. q: [B,S,H,dh]
+    (roped), k/v: [B,S,KV,dh]. Returns [B,S,H,dh].
+
+    When the sequence axis is unsharded (head-TP archs) queries are also
+    chunked and strictly-above-diagonal (chunk_j > chunk_i) KV chunks are
+    statically skipped — the triangular schedule that halves attention
+    FLOPs. Under seq-SP the query dim stays whole (it is device-sharded;
+    re-chunking it would fight GSPMD) and causal masking handles the upper
+    triangle — the dead compute is reported honestly by the roofline and
+    eliminated on TPU by the Pallas kernel's tile skipping.
+
+    ``unroll_chunks=False`` (production / memory fit-check): the KV loop is
+    a ``lax.scan`` — the while-loop structure guarantees one chunk's
+    score/prob temps live at a time regardless of scheduler choices.
+    ``unroll_chunks=True`` (roofline programs): python-unrolled, so
+    ``cost_analysis`` counts every chunk's FLOPs exactly."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    f32 = jnp.float32
+    scale = dh ** -0.5
+    q_chunked = rules.table.get("act_seq") is None
+    qc = _QC if (q_chunked and S % _QC == 0) else S
+    kvc = _KVC if S % _KVC == 0 else S
+    q5 = q.reshape(B, S, KV, G, dh)
+
+    def chunk_pair(qi, ks, vs, kpos, m, l, acc, q0):
+        """One (q-chunk, kv-chunk) online-softmax update. jax.checkpoint'd
+        so the backward recomputes the O(qc*kvc) score/prob temps per
+        chunk instead of holding all of them (the flash-backward recipe)."""
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qi, ks,
+                       preferred_element_type=f32) * scale
+        if cfg.logit_softcap:
+            s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+        qpos = q0 + jnp.arange(qi.shape[1])
+        mask = kpos[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqt,btkd->bkgqd", p, vs.astype(f32),
+            preferred_element_type=f32)
+        return m_new, l_new, acc_new
+
+    ckpt = jax.checkpoint(chunk_pair,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+
+    outs = []
+    for i in range(S // qc):
+        q0 = i * qc
+        qi = q5[:, q0:q0 + qc]
+        hi = q0 + qc if qc < S else S
+        nkv = -(-hi // kvc)
+        m = jnp.full((B, KV, G, qc), -jnp.inf, f32)
+        l = jnp.zeros((B, KV, G, qc), f32)
+        acc = jnp.zeros((B, KV, G, qc, dh), f32)
+        if unroll_chunks:
+            for j in range(nkv):
+                t0 = j * kvc
+                t1 = min(t0 + kvc, hi)
+                kpos = t0 + jnp.arange(t1 - t0)
+                m, l, acc = ckpt(qi, k[:, t0:t1], v[:, t0:t1], kpos,
+                                 m, l, acc, q0)
+        else:
+            ks = k[:, :nkv * kvc].reshape(B, nkv, kvc, KV, dh) \
+                .transpose(1, 0, 2, 3, 4)
+            vs = v[:, :nkv * kvc].reshape(B, nkv, kvc, KV, dh) \
+                .transpose(1, 0, 2, 3, 4)
+            kpos = jnp.arange(nkv * kvc).reshape(nkv, kvc)
+
+            def body(carry, xs):
+                m, l, acc = carry
+                ks_j, vs_j, kpos_j = xs
+                m, l, acc = ckpt(qi, ks_j, vs_j, kpos_j, m, l, acc, q0)
+                return (m, l, acc), None
+
+            (m, l, acc), _ = jax.lax.scan(body, (m, l, acc),
+                                          (ks, vs, kpos))
+        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+    out = jnp.concatenate(outs, axis=3) if len(outs) > 1 else outs[0]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, dh)
+
+
+def _local_band(q, k, v, cfg):
+    """Sliding-window attention as banded block attention: each block of
+    ``bc`` queries attends to (previous + own) key blocks, masked to the
+    window — S * 2*bc compute instead of S^2. Requires bc >= window."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    f32 = jnp.float32
+    bc = max(cfg.window, 1024)
+    assert S % bc == 0 and bc >= cfg.window
+    nb = S // bc
+    qb = q.reshape(B, nb, bc, KV, G, dh)
+    kb = k.reshape(B, nb, bc, KV, dh)
+    vb = v.reshape(B, nb, bc, KV, dh).astype(f32)
+    zero_k = jnp.zeros_like(kb[:, :1])
+    zero_v = jnp.zeros_like(vb[:, :1])
+    kcat = jnp.concatenate([jnp.concatenate([zero_k, kb[:, :-1]], 1), kb], 2)
+    vcat = jnp.concatenate([jnp.concatenate([zero_v, vb[:, :-1]], 1), vb], 2)
+    s = jnp.einsum("bnqkgd,bntkd->bnkgqt", qb, kcat,
+                   preferred_element_type=f32) * (dh ** -0.5)
+    if cfg.logit_softcap:
+        s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+    rel = (bc + jnp.arange(bc))[:, None] - jnp.arange(2 * bc)[None, :]
+    mask0 = (rel >= 0) & (rel < cfg.window)            # [bc, 2bc]
+    first = jnp.arange(2 * bc)[None, :] >= bc          # block 0: no prev
+    mask = jnp.where(jnp.arange(nb)[:, None, None] == 0,
+                     mask0[None] & first[None], mask0[None])
+    s = jnp.where(mask[None, :, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnkgqt,bntkd->bnqkgd", p, vcat,
+                     preferred_element_type=f32)
+    return out.reshape(B, S, H, dh)
+
+
+def attention(params, x, cfg, rules, kind="full", positions=None,
+              cache=None, cache_pos=None, want_cache=False,
+              unroll_chunks=False):
+    """Returns (out, new_cache). Train: cache=None, want_cache=False.
+    Prefill: cache=None, want_cache=True -> new_cache holds the roped K/V
+    for the whole sequence (the decode cache layout).
+
+    Decode: x is [B,1,D]; cache = {"k": [B,T,KV,dh], "v": ...};
+    cache_pos = scalar int32 write index.
+    """
+    B, S, D = x.shape
+    theta = cfg.rope_theta
+    if kind == "full" and cfg.rope_theta_global is not None:
+        theta = cfg.rope_theta_global
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+
+    if cache is None:
+        if positions is None:
+            positions = jnp.arange(S)
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+        q = rules.shard(q, "act_batch", "act_seq", "act_heads", None)
+        k = rules.shard(k, "act_batch", "act_seq", "act_kv", None)
+        v = rules.shard(v, "act_batch", "act_seq", "act_kv", None)
+        if S >= FLASH_S_MIN and kind == "swa":
+            out = _local_band(q, k, v, cfg).astype(x.dtype)
+        elif S >= FLASH_S_MIN:
+            out = _flash_full(q, k, v, cfg, rules,
+                              unroll_chunks=unroll_chunks).astype(x.dtype)
+        else:
+            scores = _gqa_scores(q, k, cfg)
+            qpos = positions[:, None]
+            kpos = positions[None, :]
+            mask = kpos <= qpos
+            if kind == "swa":
+                mask &= (qpos - kpos) < cfg.window
+            if cfg.logit_softcap:
+                scores = jnp.tanh(scores / cfg.logit_softcap) * \
+                    cfg.logit_softcap
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+        new_cache = {"k": k, "v": v} if want_cache else None
+    else:
+        # single-token decode
+        pos = cache_pos
+        T = cache["k"].shape[1]
+        ring = kind == "swa" and cfg.swa_ring_cache
+        wpos = pos % T if ring else pos
+        q = rope(q, jnp.full((S,), pos), theta)
+        k = rope(k, jnp.full((S,), pos), theta)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, wpos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, wpos, 0, 0))
+        ck = rules.shard(ck, "act_batch", "cache_seq", "cache_kv", None)
+        cv = rules.shard(cv, "act_batch", "cache_seq", "cache_kv", None)
+        scores = _gqa_scores(q, ck.astype(x.dtype), cfg)   # [B,KV,G,1,T]
+        if ring:
+            # slot s holds absolute position pos - ((pos - s) mod T);
+            # unwritten slots map to negative positions and are masked
+            kpos = pos - jnp.mod(pos - jnp.arange(T), T)
+        else:
+            kpos = jnp.arange(T)
+        mask = (kpos <= pos) & (kpos >= 0)
+        if kind == "swa":
+            mask &= (pos - kpos) < cfg.window
+        if cfg.logit_softcap:
+            scores = jnp.tanh(scores / cfg.logit_softcap) * cfg.logit_softcap
+        scores = jnp.where(mask[None, None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", probs, cv.astype(x.dtype))
+        new_cache = {"k": ck, "v": cv}
+
+    out = out.reshape(B, S, cfg.n_heads, cfg.hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    out = rules.shard(out, "act_batch", "act_res_seq", "act_embed")
+    return out, new_cache
+
+
+def mlp_params(cfg, create):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_kind == "swiglu":
+        return {"w_gate": create((d, f), ("embed", "mlp"), d ** -0.5),
+                "w_up": create((d, f), ("embed", "mlp"), d ** -0.5),
+                "w_down": create((f, d), ("mlp", "embed"), f ** -0.5)}
+    return {"w_up": create((d, f), ("embed", "mlp"), d ** -0.5),
+            "w_down": create((f, d), ("mlp", "embed"), f ** -0.5)}
+
+
+def mlp(params, x, cfg, rules):
+    w_up = params["w_up"].astype(x.dtype)
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"].astype(x.dtype)) * (x @ w_up)
+    else:
+        h = jax.nn.gelu(x @ w_up)
+    h = rules.shard(h, "act_batch", "act_seq", "act_mlp")
+    out = h @ params["w_down"].astype(x.dtype)
+    return rules.shard(out, "act_batch", "act_res_seq", "act_embed")

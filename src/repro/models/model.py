@@ -1,0 +1,401 @@
+"""Unified decoder-only LM covering all 10 assigned architectures.
+
+Parameters are built through a single structure function (``_param_tree``)
+driven by a ``create`` callback, so init / abstract shapes / logical
+sharding specs always agree. Layer stacks are stored with a leading
+``repeat`` dim (n_layers / pattern period) and either scanned (fast
+compile; used for training and the memory fit-check) or python-unrolled
+(exact per-layer FLOPs for the roofline dry-run).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+from .config import ModelConfig, LayerSpec
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def _layer_params(cfg, spec: LayerSpec, create):
+    p = {"ln1": L.rmsnorm_params(cfg.d_model, create),
+         "ln2": L.rmsnorm_params(cfg.d_model, create)}
+    if spec.attn in ("full", "swa"):
+        p["attn"] = L.attention_params(cfg, create, spec.attn)
+    elif spec.attn == "mamba":
+        p["mamba"] = SSM.mamba_params(cfg, create)
+    elif spec.attn == "rwkv":
+        p["rwkv_t"] = SSM.rwkv_params(cfg, create)
+    if spec.attn == "rwkv":
+        p["rwkv_c"] = SSM.rwkv_channel_params(cfg, create)
+    elif spec.mlp == "dense":
+        p["mlp"] = L.mlp_params(cfg, create)
+    else:
+        p["moe"] = MOE.moe_params(cfg, create)
+    return p
+
+
+def _param_tree(cfg: ModelConfig, create):
+    V, D = cfg.vocab_padded, cfg.d_model
+
+    def stacked(shape, axes, scale, init="normal"):
+        return create((cfg.n_repeats, *shape), ("repeat", *axes), scale, init)
+
+    p: dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        p["embed"] = create((V, D), ("vocab", "embed"), 1.0)
+    elif cfg.input_mode == "codebooks":
+        p["embed"] = create((cfg.n_codebooks, V, D), ("nil", "vocab", "embed"), 1.0)
+    # embeddings mode: no input table (modality stub supplies activations)
+
+    p["layers"] = {
+        f"pos{i}": _layer_params(cfg, spec,
+                                 lambda s, a, sc, init="normal":
+                                 stacked(s, a, sc, init))
+        for i, spec in enumerate(cfg.pattern)
+    }
+    p["final_norm"] = L.rmsnorm_params(D, create)
+    if not cfg.tie_embeddings:
+        if cfg.input_mode == "codebooks":
+            p["lm_head"] = create((cfg.n_codebooks, D, V),
+                                  ("nil", "embed", "vocab"), D ** -0.5)
+        else:
+            p["lm_head"] = create((D, V), ("embed", "vocab"), D ** -0.5)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    pdt = jnp.dtype(cfg.param_dtype)
+    counter = [0]
+
+    def create(shape, axes, scale, init="normal"):
+        counter[0] += 1
+        k = jax.random.fold_in(key, counter[0])
+        if init == "ones":
+            return jnp.ones(shape, pdt)
+        if init == "zeros":
+            return jnp.zeros(shape, pdt)
+        if init == "half":
+            return jnp.full(shape, 0.5, pdt)
+        if init == "ssm_a":        # A_log: log(1..d_state) per state dim
+            ds = shape[-1]
+            return jnp.broadcast_to(
+                jnp.log(jnp.arange(1, ds + 1, dtype=jnp.float32)), shape
+            ).astype(pdt)
+        if init == "ssm_dt":       # softplus^-1(0.01)
+            return jnp.full(shape, -4.6, pdt)
+        if init == "ssm_w0":       # decay rate ~ exp(-exp(w0)) ~ 0.6/step
+            return jnp.full(shape, -0.7, pdt)
+        return (jax.random.normal(k, shape, jnp.float32) *
+                (scale if scale else 0.02)).astype(pdt)
+
+    return _param_tree(cfg, create)
+
+
+def abstract_params(cfg: ModelConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    return _param_tree(
+        cfg, lambda shape, axes, scale, init="normal":
+        jax.ShapeDtypeStruct(shape, pdt))
+
+
+def param_logical_specs(cfg: ModelConfig):
+    return _param_tree(
+        cfg, lambda shape, axes, scale, init="normal": tuple(axes))
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _embed_input(params, batch, cfg, rules):
+    dt = cfg.act_dtype
+    if cfg.input_mode == "tokens":
+        x = params["embed"].astype(dt)[batch["tokens"]]
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    elif cfg.input_mode == "codebooks":
+        emb = params["embed"].astype(dt)
+        x = sum(emb[i][batch["tokens"][..., i]]
+                for i in range(cfg.n_codebooks))
+    else:  # embeddings (modality frontend stub)
+        x = batch["embeddings"].astype(dt)
+    return rules.shard(x, "act_batch", "act_res_seq", "act_embed")
+
+
+def _layer_apply(p, spec: LayerSpec, x, cfg, rules, positions=None,
+                 cache=None, pos=None, influence=None, unroll_chunks=False,
+                 want_cache=False):
+    """One pattern-position layer. Returns (x, new_cache, new_infl, stats).
+
+    ``want_cache`` (prefill): with cache=None, also emit the end-of-
+    sequence cache/state in the decode layout."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    new_cache = {}
+    if spec.attn in ("full", "swa"):
+        out, kv = L.attention(p["attn"], h, cfg, rules, spec.attn,
+                              positions, cache=None if cache is None
+                              else {"k": cache["k"], "v": cache["v"]},
+                              cache_pos=pos, want_cache=want_cache,
+                              unroll_chunks=unroll_chunks)
+        if kv is not None:
+            new_cache.update(kv)
+    elif spec.attn == "mamba":
+        st = None if cache is None else {"h": cache["h"], "conv": cache["conv"]}
+        out, st2 = SSM.mamba_apply(p["mamba"], h, cfg, rules, state=st,
+                                   unroll_chunks=unroll_chunks,
+                                   want_state=want_cache)
+        if st2 is not None:
+            new_cache.update(st2)
+    else:  # rwkv
+        st = None if cache is None else {"s": cache["s"],
+                                         "shift": cache["shift_t"]}
+        out, st2 = SSM.rwkv_time_mix(p["rwkv_t"], h, cfg, rules, state=st,
+                                     unroll_chunks=unroll_chunks,
+                                     want_state=want_cache)
+        if st2 is not None:
+            new_cache["s"] = st2["s"]
+            new_cache["shift_t"] = st2["shift"]
+    x = x + out
+
+    h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    new_infl, stats = None, {}
+    if spec.attn == "rwkv":
+        st = None if cache is None else cache["shift_c"]
+        out2, st2 = SSM.rwkv_channel_mix(p["rwkv_c"], h2, cfg, rules,
+                                         state=st, want_state=want_cache)
+        if st2 is not None:
+            new_cache["shift_c"] = st2
+    elif spec.mlp == "dense":
+        out2 = L.mlp(p["mlp"], h2, cfg, rules)
+    else:
+        out2, new_infl, stats = MOE.moe_apply(p["moe"], h2, cfg, rules,
+                                              influence)
+    return x + out2, (new_cache or None), new_infl, stats
+
+
+def forward(params, batch, cfg: ModelConfig, rules, unroll: bool = False,
+            remat: bool = True, influence=None, want_cache: bool = False,
+            last_only: bool = False):
+    """Training/prefill forward. Returns (logits, new_influence, moe_stats)
+    or, with ``want_cache``, (logits, new_influence, moe_stats, cache).
+
+    ``influence``: [n_repeats, n_moe, E] balanced-k-means router state.
+    ``want_cache``: emit the populated decode cache (prefill).
+    ``last_only``: unembed only the final position (prefill returns one
+    next-token distribution, not [B,S,V])."""
+    x = _embed_input(params, batch, cfg, rules)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    moe_positions = [i for i, s in enumerate(cfg.pattern) if s.mlp == "moe"
+                     and s.attn != "rwkv"]
+    use_infl = influence is not None
+    n_moe = len(moe_positions)
+
+    def repeat_body(x, p_r, infl_r):
+        new_infls, drop = [], jnp.zeros((), jnp.float32)
+        cache_r = {}
+        for i, spec in enumerate(cfg.pattern):
+            li = moe_positions.index(i) if i in moe_positions else None
+            inf_i = infl_r[li] if (use_infl and li is not None) else None
+            x, nc, ni, st = _layer_apply(p_r[f"pos{i}"], spec, x, cfg, rules,
+                                         positions, influence=inf_i,
+                                         unroll_chunks=unroll,
+                                         want_cache=want_cache)
+            if want_cache:
+                cache_r[f"pos{i}"] = nc
+            if li is not None:
+                new_infls.append(ni if ni is not None else
+                                 jnp.ones(cfg.moe.n_experts, jnp.float32))
+                drop = drop + st.get("dropped_frac", 0.0)
+        ninf = (jnp.stack(new_infls) if new_infls
+                else jnp.zeros((0, 1), jnp.float32))
+        return x, ninf, drop, cache_r
+
+    E = cfg.moe.n_experts if cfg.moe else 1
+    infl_all = (influence if use_infl
+                else jnp.zeros((cfg.n_repeats, n_moe or 0, E), jnp.float32))
+    if unroll:
+        drops, ninfs, caches = [], [], []
+        for r in range(cfg.n_repeats):
+            p_r = jax.tree.map(lambda v: v[r], params["layers"])
+            x, ninf, drop, cache_r = repeat_body(x, p_r, infl_all[r])
+            ninfs.append(ninf)
+            drops.append(drop)
+            caches.append(cache_r)
+        new_influence = jnp.stack(ninfs) if use_infl else None
+        drop_frac = jnp.mean(jnp.stack(drops)) if drops else 0.0
+        cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+                 if want_cache else None)
+    else:
+        def scan_body(x, inp):
+            p_r, infl_r = inp
+            x, ninf, drop, cache_r = repeat_body(x, p_r, infl_r)
+            return x, (ninf, drop, cache_r)
+        body = jax.checkpoint(scan_body,
+                              policy=jax.checkpoint_policies.nothing_saveable
+                              ) if remat else scan_body
+        x, (ninf, drops, cache) = jax.lax.scan(body, x,
+                                               (params["layers"], infl_all))
+        new_influence = ninf if use_infl else None
+        drop_frac = jnp.mean(drops)
+        if not want_cache:
+            cache = None
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    logits = _unembed(params, x, cfg, rules)
+    stats = {"moe_dropped_frac": drop_frac}
+    if want_cache:
+        return logits, new_influence, stats, cache
+    return logits, new_influence, stats
+
+
+def prefill(params, batch, cfg: ModelConfig, rules, unroll: bool = False):
+    """Serving prefill: full-sequence forward that returns the last-position
+    logits and the populated decode cache (paper-of-record layout matching
+    ``init_cache``/``decode_step``)."""
+    logits, _, _, cache = forward(params, batch, cfg, rules, unroll=unroll,
+                                  remat=False, want_cache=True,
+                                  last_only=True)
+    return logits, cache
+
+
+def _unembed(params, x, cfg, rules):
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(dt).T
+    else:
+        w = params["lm_head"].astype(dt)
+    if cfg.input_mode == "codebooks":
+        logits = jnp.einsum("bsd,ndv->bsnv", x, w)
+        return rules.shard(logits, "act_batch", "logits_seq", None,
+                           "act_vocab")
+    logits = x @ w
+    return rules.shard(logits, "act_batch", "logits_seq", "act_vocab")
+
+
+def loss_fn(logits, labels, cfg, z_loss: float = 1e-4):
+    """Cross entropy over the padded vocab (padded ids masked out)."""
+    V = cfg.vocab_padded
+    lf = logits.astype(jnp.float32)
+    if cfg.vocab_size < V:
+        pad_mask = jnp.arange(V) >= cfg.vocab_size
+        lf = jnp.where(pad_mask, -1e30, lf)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, rules):
+    """Per-pattern-position caches stacked over repeats, pre-sharded."""
+    dt = cfg.act_dtype
+    R = cfg.n_repeats
+    cache = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.attn in ("full", "swa"):
+            seq = max_seq
+            if spec.attn == "swa" and cfg.swa_ring_cache:
+                # ring cache: a window of keys suffices; decode writes at
+                # pos % ring and masks by absolute distance
+                seq = min(max_seq, cfg.window)
+            # distinct buffers: k/v are donated separately in serve_step
+            c = {"k": jnp.zeros((R, batch, seq, cfg.n_kv_heads, cfg.hd),
+                                dt),
+                 "v": jnp.zeros((R, batch, seq, cfg.n_kv_heads, cfg.hd),
+                                dt)}
+        elif spec.attn == "mamba":
+            st = SSM.mamba_state_init(cfg, batch, dt)
+            c = jax.tree.map(lambda x: jnp.broadcast_to(x, (R, *x.shape)), st)
+        else:
+            st = SSM.rwkv_state_init(cfg, batch)
+            c = jax.tree.map(lambda x: jnp.broadcast_to(x, (R, *x.shape)), st)
+        cache[f"pos{i}"] = c
+    return cache
+
+
+def extend_cache(cache, cfg: ModelConfig, max_seq: int):
+    """Pad a prefill-produced cache (seq length = prompt) out to the decode
+    horizon so ``decode_step`` can write positions >= prompt length."""
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        c = cache[f"pos{i}"]
+        if spec.attn in ("full", "swa"):
+            pad = max_seq - c["k"].shape[2]
+            out[f"pos{i}"] = {kk: jnp.pad(
+                v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                for kk, v in c.items()}
+        else:
+            out[f"pos{i}"] = c
+    return out
+
+
+def cache_logical_specs(cfg: ModelConfig):
+    specs = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.attn in ("full", "swa"):
+            s = ("repeat", "act_batch", "cache_seq", "cache_kv", None)
+            c = {"k": s, "v": s}
+        elif spec.attn == "mamba":
+            c = {"h": ("repeat", "act_batch", "act_mlp", None),
+                 "conv": ("repeat", "act_batch", None, "act_mlp")}
+        else:
+            c = {"s": ("repeat", "act_batch", None, None, None),
+                 "shift_t": ("repeat", "act_batch", None),
+                 "shift_c": ("repeat", "act_batch", None)}
+        specs[f"pos{i}"] = c
+    return specs
+
+
+def decode_step(params, cache, batch, pos, cfg: ModelConfig, rules,
+                unroll: bool = False):
+    """One-token decode. batch: {"tokens": [B,1]...}; pos: scalar int32.
+    Returns (logits [B,1,V], new_cache)."""
+    x = _embed_input(params, batch, cfg, rules)
+
+    def repeat_body(x, p_r, cache_r):
+        new_cache_r = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, nc, _, _ = _layer_apply(p_r[f"pos{i}"], spec, x, cfg, rules,
+                                       cache=cache_r[f"pos{i}"], pos=pos)
+            new_cache_r[f"pos{i}"] = nc
+        return x, new_cache_r
+
+    if unroll:
+        ncs = []
+        for r in range(cfg.n_repeats):
+            p_r = jax.tree.map(lambda v: v[r], params["layers"])
+            c_r = jax.tree.map(lambda v: v[r], cache)
+            x, nc = repeat_body(x, p_r, c_r)
+            ncs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+    else:
+        def scan_body(x, inp):
+            p_r, c_r = inp
+            x, nc = repeat_body(x, p_r, c_r)
+            return x, nc
+        x, new_cache = jax.lax.scan(scan_body, x, (params["layers"], cache))
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _unembed(params, x, cfg, rules)
+    return logits, new_cache

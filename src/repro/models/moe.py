@@ -1,0 +1,152 @@
+"""Mixture-of-Experts layer with two routers:
+
+* ``linear``          — standard learned-logits router (baseline).
+* ``balanced_kmeans`` — the paper's technique as a first-class MoE router:
+  experts are cluster centers in token-embedding space; tokens are assigned
+  by *effective distance* ``sqdist(x, centroid)/influence^2`` and per-expert
+  influence values are updated each step with the paper's geometric rule
+  (Eq. 1, via ``core.balanced_kmeans.adapt_influence``). This is an
+  aux-loss-free load-balancing mechanism: oversubscribed experts lose
+  influence and shed tokens, exactly like oversized clusters in the paper.
+  Router *state* (influence + running load) is carried outside params and
+  updated functionally by the train step.
+
+Dispatch is **scatter-based** (sort-free MegaBlocks-style): tokens are
+placed into a per-expert slot buffer with `.at[].set` using positions from
+a cumulative count — no O(T·E·C) one-hot einsum, so compiled HLO FLOPs
+reflect only real expert compute (critical for honest rooflines).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.balanced_kmeans import adapt_influence
+
+
+def moe_params(cfg, create):
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff, m.n_experts
+    p = {
+        "router": create((d, E), ("embed", "expert"), d ** -0.5),
+        "w_gate": create((E, d, f), ("expert", "e_embed", "e_mlp"), d ** -0.5),
+        "w_up": create((E, d, f), ("expert", "e_embed", "e_mlp"), d ** -0.5),
+        "w_down": create((E, f, d), ("expert", "e_mlp", "e_embed"), f ** -0.5),
+    }
+    if m.n_shared_experts:
+        fs = m.d_ff * m.n_shared_experts
+        p["shared"] = {
+            "w_gate": create((d, fs), ("embed", "mlp"), d ** -0.5),
+            "w_up": create((d, fs), ("embed", "mlp"), d ** -0.5),
+            "w_down": create((fs, d), ("mlp", "embed"), fs ** -0.5)}
+    if m.router == "balanced_kmeans":
+        p["centroids"] = create((E, d), ("expert", "embed"), d ** -0.5)
+    return p
+
+
+def init_router_state(cfg):
+    """Per-MoE-layer influence vector (paper: initialized to 1)."""
+    if cfg.moe is None or cfg.moe.router != "balanced_kmeans":
+        return None
+    n_moe = sum(1 for s in cfg.pattern if s.mlp == "moe")
+    return {"influence": jnp.ones((cfg.n_repeats, n_moe, cfg.moe.n_experts),
+                                  jnp.float32)}
+
+
+def router_logits(params, x, m, influence):
+    """x: [T, D] -> logits [T, E] (higher = preferred)."""
+    if m.router == "linear":
+        return x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    c = params["centroids"].astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    sq = (jnp.sum(xf * xf, -1, keepdims=True) + jnp.sum(c * c, -1)[None]
+          - 2.0 * xf @ c.T)
+    eff = jnp.maximum(sq, 0.0) / (influence * influence)[None]
+    return -eff  # min effective distance == max logit
+
+
+def moe_apply(params, x, cfg, rules, influence=None):
+    """x: [B, S, D]. Returns (out, new_influence, load_stats).
+
+    Dispatch groups are per batch row (group = one sequence): capacity is
+    ``top_k * S / E * cf`` per group, the cumulative-position scatter runs
+    over S*K items per group, keeping dispatch state tiny and fully batch-
+    sharded. Expert weights are expert-sharded (EP) when E % tp == 0, else
+    d_model-TP (contracting-dim sharding with psum) — see dist/rules.py.
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+
+    infl = influence if influence is not None else jnp.ones(E, jnp.float32)
+    logits = router_logits(params, x.reshape(B * S, D), m, infl)
+    logits = logits.reshape(B, S, E)
+    gates, eidx = jax.lax.top_k(logits, K)               # [B,S,K]
+    gates = jax.nn.softmax(gates, axis=-1).astype(x.dtype)
+
+    C = int(max(1, round(K * S / E * m.capacity_factor)))
+    T = S * K
+    flat_e = eidx.reshape(B, T)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [B,S*K,E]
+    cum = jnp.cumsum(onehot, axis=1)
+    pos = jnp.take_along_axis(cum, flat_e[..., None], axis=2)[..., 0] - 1
+    ok = pos < C
+    slot = jnp.where(ok, flat_e * C + pos, E * C)        # overflow -> sentinel
+    src = None if m.dispatch_no_repeat else \
+        (jnp.repeat(x, K, axis=1) if K > 1 else x)       # [B,S*K,D]
+    # --- gather-based dispatch ------------------------------------------
+    # A scatter into [B, E*C, D] slot buffers does not partition under
+    # GSPMD (it replicates — hundreds of GB/device for the 400B MoE
+    # cells). Instead, stable-sort token ids by expert; slot (e, c) then
+    # *gathers* token order[b, starts[e]+c] — gathers with a leading batch
+    # dim partition cleanly. Within-expert order matches the cumulative
+    # `pos` above, so the return path can keep indexing by `slot`.
+    order = jnp.argsort(flat_e, axis=1, stable=True)     # [B, T]
+    counts = jnp.sum(onehot, axis=1)                     # [B, E]
+    starts = jnp.cumsum(counts, axis=1) - counts         # exclusive
+    c_idx = jnp.arange(C)[None, None]
+    src_pos = jnp.clip(starts[:, :, None] + c_idx, 0, T - 1)
+    valid = c_idx < jnp.minimum(counts, C)[:, :, None]   # [B, E, C]
+    tok_idx = jnp.take_along_axis(order, src_pos.reshape(B, E * C), axis=1)
+    if m.dispatch_no_repeat:
+        # flat position t corresponds to token t // K: gather straight from
+        # x — no K-times-repeated source tensor is ever materialized
+        hidden = jnp.take_along_axis(x, (tok_idx // K)[..., None], axis=1)
+    else:
+        hidden = jnp.take_along_axis(src, tok_idx[..., None], axis=1)
+    hidden = hidden * valid.reshape(B, E * C, 1).astype(x.dtype)
+    hidden = hidden.reshape(B, E, C, D)
+    hidden = rules.shard(hidden, "act_batch", "expert", None, "act_e_embed")
+
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", hidden,
+                               params["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("becd,edf->becf", hidden, params["w_up"].astype(x.dtype))
+    eo = jnp.einsum("becf,efd->becd", g * u, params["w_down"].astype(x.dtype))
+    eo = rules.shard(eo, "act_batch", "expert", None, "act_e_embed")
+    eo = jnp.concatenate([eo.reshape(B, E * C, D),
+                          jnp.zeros((B, 1, D), x.dtype)], axis=1)
+    gathered = jnp.take_along_axis(eo, slot[..., None], axis=1)  # [B,S*K,D]
+    w = (gates.reshape(B, S * K) * ok.astype(x.dtype))[..., None]
+    out = jnp.sum((gathered * w).reshape(B, S, K, D), axis=2)
+
+    if m.n_shared_experts:
+        sp = params["shared"]
+        h = jax.nn.silu(x @ sp["w_gate"].astype(x.dtype)) * \
+            (x @ sp["w_up"].astype(x.dtype))
+        h = rules.shard(h, "act_batch", "act_seq", "act_mlp")
+        out = out + h @ sp["w_down"].astype(x.dtype)
+
+    # --- paper Eq. (1): influence update from realized loads -------------
+    load = jnp.sum(onehot.astype(jnp.float32), axis=(0, 1))      # [E]
+    stats = {"dropped_frac": 1.0 - jnp.mean(ok.astype(jnp.float32)),
+             "load_imbalance": jnp.max(load) / (K * B * S / E) - 1.0}
+    new_infl = None
+    if m.router == "balanced_kmeans":
+        target = K * B * S / E
+        new_infl, _ = adapt_influence(infl, load, target, m.router_d_eff,
+                                      m.router_influence_clip)
+        # only influence *ratios* matter; renormalize to geometric mean 1
+        # so the state cannot drift out of float range over long runs
+        new_infl = new_infl * jnp.exp(-jnp.mean(jnp.log(
+            jnp.maximum(new_infl, 1e-12))))
+    return rules.shard(out, "act_batch", "act_res_seq", "act_embed"), new_infl, stats

@@ -1,0 +1,309 @@
+"""State-space / linear-recurrence blocks: Mamba (jamba) and RWKV6 (finch).
+
+TPU adaptation notes (DESIGN.md §4): both blocks are expressed as *chunked*
+recurrences — an outer ``lax.scan`` over sequence chunks carrying the
+recurrent state, with fully-parallel (associative-scan / matmul) compute
+inside each chunk. This maps the sequential recurrence onto MXU/VPU-friendly
+dense ops, keeps the live workspace to one chunk, and gives bit-consistent
+train/decode semantics (tested against step-by-step oracles).
+
+RWKV6 numerics: decays are processed in log space; the intra-chunk
+attention-like term uses factors exp(±cum) whose exponent is bounded by
+``chunk * |w_log|_max``; with chunk=16 and w_log clamped to >= -5 the
+factors stay inside f32 range (|exp| <= e^80 < f32 max).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ===========================================================================
+# Mamba (selective SSM, as interleaved in Jamba)
+# ===========================================================================
+
+def mamba_params(cfg, create):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dk = cfg.mamba_d_conv
+    dt_rank = max(d // 16, 1)
+    return {
+        "in_proj": create((d, 2 * di), ("embed", "mlp"), d ** -0.5),
+        "conv_w": create((dk, di), ("conv", "mlp"), dk ** -0.5),
+        "x_proj": create((di, dt_rank + 2 * ds), ("mlp", "nil"), di ** -0.5),
+        "dt_proj": create((dt_rank, di), ("rank", "mlp"), dt_rank ** -0.5),
+        "dt_bias": create((di,), ("mlp",), 0.0, init="ssm_dt"),
+        "a_log": create((di, ds), ("mlp", "state"), 0.0, init="ssm_a"),
+        "d_skip": create((di,), ("mlp",), 0.0, init="ones"),
+        "out_proj": create((di, d), ("mlp", "embed"), di ** -0.5),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: [B,S,di], w: [dk,di].
+    state: [B,dk-1,di] trailing context (decode). Returns (y, new_state)."""
+    dk = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], dk - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # [B, S+dk-1, di]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(dk))
+    new_state = xp[:, -(dk - 1):]
+    return y, new_state
+
+
+def _ssm_chunk(h0, dt_c, b_c, x_c, cmat, a):
+    """One chunk of the selective scan via associative scan.
+
+    The discretized transition/input tensors da/db ([B,C,di,ds]) are
+    computed HERE, per chunk, from the chunk's dt/B/x slices — computing
+    them for the full sequence up front materializes an S x di x ds f32
+    tensor (hundreds of GB/device for jamba at 4k+), the single largest
+    memory hazard in the hybrid stack.
+
+    h0: [B,di,ds]; dt_c/x_c: [B,C,di]; b_c/cmat: [B,C,ds]; a: [di,ds].
+    Returns (y [B,C,di], hC)."""
+    da = jnp.exp(dt_c[..., None] * a[None, None])          # [B,C,di,ds]
+    db = dt_c[..., None] * b_c[:, :, None, :] * x_c[..., None]
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    aprod, bacc = jax.lax.associative_scan(combine, (da, db), axis=1)
+    h = aprod * h0[:, None] + bacc                   # [B,C,di,ds]
+    y = jnp.einsum("bcds,bcs->bcd", h, cmat)
+    return y, h[:, -1]
+
+
+def mamba_apply(params, x, cfg, rules, state=None, chunk=128,
+                unroll_chunks=False, want_state=False):
+    """x: [B,S,D]. state (decode): {"h": [B,di,ds], "conv": [B,dk-1,di]}.
+    ``want_state`` (prefill): return the end-of-sequence recurrent state.
+    Returns (out, new_state)."""
+    B, S, D = x.shape
+    di = cfg.mamba_expand * D
+    ds = cfg.mamba_d_state
+    dt_rank = max(D // 16, 1)
+    xz = x @ params["in_proj"].astype(x.dtype)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = rules.shard(xs, "act_batch", "act_seq", "act_mlp")
+    conv_state = None if state is None else state["conv"]
+    xs, new_conv = _causal_conv(xs, params["conv_w"].astype(x.dtype),
+                                conv_state)
+    xs = jax.nn.silu(xs)
+    dbc = xs @ params["x_proj"].astype(x.dtype)
+    dt_in, bmat, cmat = jnp.split(dbc, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"].astype(x.dtype)
+                         + params["dt_bias"].astype(x.dtype))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))          # [di, ds]
+    dtf = dt.astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)
+    xf = xs.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+
+    if state is not None:                                      # decode (S==1)
+        da0 = jnp.exp(dtf[:, 0, :, None] * a[None])
+        db0 = dtf[:, 0, :, None] * bf[:, 0, None, :] * xf[:, 0, :, None]
+        h = state["h"] * da0 + db0
+        y = jnp.einsum("bds,bs->bd", h, cf[:, 0])[:, None]
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        h0 = jnp.zeros((B, di, ds), jnp.float32)
+        nc = S // chunk if S % chunk == 0 else 1
+        csz = chunk if S % chunk == 0 else S
+        dt_c = dtf.reshape(B, nc, csz, di)
+        b_c = bf.reshape(B, nc, csz, ds)
+        x_c = xf.reshape(B, nc, csz, di)
+        cm_c = cf.reshape(B, nc, csz, ds)
+        # unroll cap: beyond 64 chunks the unrolled HLO explodes; the scan
+        # body is then counted once by cost_analysis — an undercount of
+        # the state-recurrence term only (<5% of mamba-layer FLOPs, the
+        # projections dominate); documented in EXPERIMENTS.md §Roofline.
+        if unroll_chunks and nc <= 64:
+            ys, h = [], h0
+            for i in range(nc):
+                y_i, h = _ssm_chunk(h, dt_c[:, i], b_c[:, i], x_c[:, i],
+                                    cm_c[:, i], a)
+                ys.append(y_i)
+            y = jnp.concatenate(ys, axis=1)
+        else:
+            def step(h, inp):
+                y_i, h = _ssm_chunk(h, *inp, a)
+                return h, y_i
+            h, ys = jax.lax.scan(
+                step, h0, (dt_c.transpose(1, 0, 2, 3),
+                           b_c.transpose(1, 0, 2, 3),
+                           x_c.transpose(1, 0, 2, 3),
+                           cm_c.transpose(1, 0, 2, 3)))
+            y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+        new_state = {"h": h, "conv": new_conv} if want_state else None
+    y = y.astype(x.dtype) + xs * params["d_skip"].astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"].astype(x.dtype)
+    return rules.shard(out, "act_batch", "act_res_seq", "act_embed"), new_state
+
+
+def mamba_state_init(cfg, batch, dtype=jnp.float32):
+    di = cfg.mamba_expand * cfg.d_model
+    return {"h": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype)}
+
+
+# ===========================================================================
+# RWKV6 ("finch": data-dependent per-channel decay)
+# ===========================================================================
+
+def rwkv_params(cfg, create):
+    d = cfg.d_model
+    r = cfg.rwkv_lora_rank
+    H = d // cfg.rwkv_head_dim
+    p = {
+        "mu": create((5, d), ("nil", "embed"), 0.0, init="half"),  # r,k,v,g,w
+        "w0": create((d,), ("embed",), 0.0, init="ssm_w0"),
+        "w_lora_a": create((d, r), ("embed", "rank"), d ** -0.5),
+        "w_lora_b": create((r, d), ("rank", "embed"), 0.01 * r ** -0.5),
+        "wr": create((d, d), ("embed", "heads_joined"), d ** -0.5),
+        "wk": create((d, d), ("embed", "heads_joined"), d ** -0.5),
+        "wv": create((d, d), ("embed", "heads_joined"), d ** -0.5),
+        "wg": create((d, d), ("embed", "heads_joined"), d ** -0.5),
+        "wo": create((d, d), ("heads_joined", "embed"), d ** -0.5),
+        "u": create((H, cfg.rwkv_head_dim), ("nil", "nil"), 0.5),
+        "ln_w": create((H, cfg.rwkv_head_dim), ("nil", "nil"), 0.0, init="ones"),
+    }
+    return p
+
+
+W_LOG_MIN = -5.0
+RWKV_CHUNK = 16
+
+
+def _rwkv_chunk(s0, r, k, v, wlog, u):
+    """One chunk. s0: [B,H,dk,dv]; r/k/v: [B,C,H,dh]; wlog: [B,C,H,dk].
+    out_t = r_t (u*k_t) v_t + r_t S_{t-1};  S_t = diag(w_t) S_{t-1} + k_t v_t
+    Returns (out [B,C,H,dv], sC)."""
+    cum = jnp.cumsum(wlog, axis=1)                     # inclusive
+    cum_prev = cum - wlog
+    q = r * jnp.exp(cum_prev)                          # bounded <= 1-ish
+    inter = jnp.einsum("bchk,bhkv->bchv", q, s0)
+    kd = k * jnp.exp(-cum)                             # bounded by e^{C|w|}
+    A = jnp.einsum("bchk,bjhk->bhcj", q, kd)
+    C = r.shape[1]
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    A = jnp.where(mask[None, None], A, 0.0)
+    diag = jnp.einsum("bchk,bchk->bch", r, u[None, None] * k)
+    intra = jnp.einsum("bhcj,bjhv->bchv", A, v) + diag[..., None] * v
+    out = inter + intra
+    decay_end = jnp.exp(cum[:, -1])                    # [B,H,dk]
+    k_end = k * jnp.exp(cum[:, -1:] - cum)             # bounded <= 1
+    s_new = decay_end[..., None] * s0 + jnp.einsum("bchk,bchv->bhkv", k_end, v)
+    return out, s_new
+
+
+def rwkv_time_mix(params, x, cfg, rules, state=None, unroll_chunks=False,
+                  want_state=False):
+    """x: [B,S,D]. state: {"s": [B,H,dk,dv], "shift": [B,D]}.
+    ``want_state`` (prefill): return the end-of-sequence WKV state.
+    Returns (out, new_state)."""
+    B, S, D = x.shape
+    dh = cfg.rwkv_head_dim
+    H = D // dh
+    if state is None:
+        xprev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    else:
+        xprev = state["shift"][:, None]
+    mu = params["mu"].astype(x.dtype)
+    mix = [x + (xprev - x) * mu[i][None, None] for i in range(5)]
+    xr, xk, xv, xg, xw = mix
+    f32 = jnp.float32
+    r = (xr @ params["wr"].astype(x.dtype)).reshape(B, S, H, dh).astype(f32)
+    k = (xk @ params["wk"].astype(x.dtype)).reshape(B, S, H, dh).astype(f32)
+    v = (xv @ params["wv"].astype(x.dtype)).reshape(B, S, H, dh).astype(f32)
+    g = xg @ params["wg"].astype(x.dtype)
+    lora = jnp.tanh(xw @ params["w_lora_a"].astype(x.dtype)) @ \
+        params["w_lora_b"].astype(x.dtype)
+    wlog = -jnp.exp(params["w0"].astype(f32)[None, None] + lora.astype(f32))
+    wlog = jnp.maximum(wlog, W_LOG_MIN).reshape(B, S, H, dh)
+    u = params["u"].astype(f32)
+
+    if state is not None:                               # decode (S == 1)
+        s0 = state["s"]
+        r1, k1, v1, w1 = r[:, 0], k[:, 0], v[:, 0], wlog[:, 0]
+        out = jnp.einsum("bhk,bhkv->bhv", r1, s0) + \
+            jnp.einsum("bhk,bhk->bh", r1, u[None] * k1)[..., None] * v1
+        s_new = jnp.exp(w1)[..., None] * s0 + \
+            jnp.einsum("bhk,bhv->bhkv", k1, v1)
+        out = out[:, None]                              # [B,1,H,dv]
+        new_state = {"s": s_new, "shift": x[:, -1]}
+    else:
+        c = RWKV_CHUNK if S % RWKV_CHUNK == 0 else S
+        nc = S // c
+        rs = r.reshape(B, nc, c, H, dh)
+        ks = k.reshape(B, nc, c, H, dh)
+        vs = v.reshape(B, nc, c, H, dh)
+        ws = wlog.reshape(B, nc, c, H, dh)
+        s0 = jnp.zeros((B, H, dh, dh), f32)
+        # same unroll cap as mamba: the wkv recurrence is ~3% of rwkv-layer
+        # FLOPs (d*d projections dominate); scan-undercount documented.
+        if unroll_chunks and nc <= 64:
+            outs, s = [], s0
+            for i in range(nc):
+                o, s = _rwkv_chunk(s, rs[:, i], ks[:, i], vs[:, i], ws[:, i], u)
+                outs.append(o)
+            out = jnp.concatenate(outs, axis=1)
+        else:
+            def step(s, inp):
+                o, s = _rwkv_chunk(s, *inp, u)
+                return s, o
+            s, outs = jax.lax.scan(
+                step, s0, (rs.transpose(1, 0, 2, 3, 4), ks.transpose(1, 0, 2, 3, 4),
+                           vs.transpose(1, 0, 2, 3, 4), ws.transpose(1, 0, 2, 3, 4)))
+            out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+        out = out.reshape(B, S, H, dh)
+        new_state = {"s": s, "shift": x[:, -1]} if want_state else None
+
+    # per-head groupnorm, gate, output proj
+    mean = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = (out - mean) * jax.lax.rsqrt(var + 64e-5) * \
+        params["ln_w"].astype(f32)[None, None]
+    out = out.reshape(*out.shape[:-2], H * dh).astype(x.dtype) * jax.nn.silu(g)
+    out = out @ params["wo"].astype(x.dtype)
+    return rules.shard(out, "act_batch", "act_res_seq", "act_embed"), new_state
+
+
+def rwkv_channel_params(cfg, create):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu": create((2, d), ("nil", "embed"), 0.0, init="half"),  # k, r
+        "wk": create((d, f), ("embed", "mlp"), d ** -0.5),
+        "wv": create((f, d), ("mlp", "embed"), f ** -0.5),
+        "wr": create((d, d), ("embed", "nil"), d ** -0.5),
+    }
+
+
+def rwkv_channel_mix(params, x, cfg, rules, state=None, want_state=False):
+    B, S, D = x.shape
+    if state is None:
+        xprev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+        new_state = x[:, -1] if want_state else None
+    else:
+        xprev = state[:, None]
+        new_state = x[:, -1]
+    mu = params["mu"].astype(x.dtype)
+    xk = x + (xprev - x) * mu[0][None, None]
+    xr = x + (xprev - x) * mu[1][None, None]
+    h = jnp.square(jax.nn.relu(xk @ params["wk"].astype(x.dtype)))
+    h = rules.shard(h, "act_batch", "act_seq", "act_mlp")
+    out = jax.nn.sigmoid(xr @ params["wr"].astype(x.dtype)) * \
+        (h @ params["wv"].astype(x.dtype))
+    return rules.shard(out, "act_batch", "act_res_seq", "act_embed"), new_state
+
+
+def rwkv_state_init(cfg, batch):
+    dh = cfg.rwkv_head_dim
+    H = cfg.d_model // dh
+    return {"s": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "shift_t": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "shift_c": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype))}

@@ -1,0 +1,81 @@
+"""AdamW with configurable moment dtypes and decoupled weight decay.
+
+Hand-rolled (no optax in this container) but production-shaped:
+
+* moment dtype is configurable per model (bf16 moments for the 400B-class
+  archs — halves optimizer HBM, the standard large-scale trick);
+* global-norm clipping;
+* bias correction in f32 regardless of storage dtype;
+* update math runs in f32 and casts back to the param dtype, so a bf16
+  parameter store still gets stochastic-free but numerically sane updates.
+
+The optimizer state is a plain pytree (mu, nu mirroring params + scalar
+step), so checkpointing / resharding treat it like any other model state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig, lr):
+    """Returns (new_params, new_opt_state, stats)."""
+    mdt = jnp.dtype(cfg.moment_dtype)
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu_f = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu_f = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = mu_f / c1
+        vhat = nu_f / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), mu_f.astype(mdt), nu_f.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(p, g, mu, nu)
+           for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return (new_p,
+            {"mu": new_mu, "nu": new_nu, "step": step},
+            {"grad_norm": gnorm, "lr": lr})

@@ -1,0 +1,31 @@
+"""Learning-rate schedules (jittable step -> lr functions)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str = "cosine", peak: float = 3e-4,
+                  warmup_steps: int = 100, total_steps: int = 10_000,
+                  floor: float = 0.0):
+    warmup_steps = max(warmup_steps, 1)
+
+    def cosine(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / warmup_steps
+        frac = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        decay = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup_steps, warm, decay)
+
+    def linear(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / warmup_steps
+        frac = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        return jnp.where(s < warmup_steps, warm, peak * (1 - frac) + floor * frac)
+
+    def constant(step):
+        s = step.astype(jnp.float32)
+        return jnp.where(s < warmup_steps, peak * s / warmup_steps, peak)
+
+    return {"cosine": cosine, "linear": linear, "constant": constant}[kind]

@@ -1,0 +1,128 @@
+"""Serving: single-token ``serve_step`` factory + a batched request engine.
+
+``make_serve_step`` builds the jittable one-token decode used by the
+decode_32k / long_500k dry-run cells: greedy next-token from the KV-cache
+(or SSM-state) decode path, cache updated functionally. The KV cache is
+sequence-sharded over ``model`` (and over everything for the batch=1
+long-context cells) per dist/rules.py; attention against the sharded cache
+becomes a distributed-LSE reduction that GSPMD lowers to an all-reduce.
+
+``ServeEngine`` is a batched-request driver: requests are admitted into
+fixed slots, prefill populates each slot's cache through the shared
+position-aligned decode path, completed rows are masked and refilled —
+static shapes throughout, which is what a TPU serving loop needs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+def make_serve_step(cfg, rules, sample: str = "greedy",
+                    unroll: bool = False):
+    """Returns serve_step(params, cache, tokens, pos) ->
+    (next_tokens [B,1(,n_codebooks)], new_cache, logits)."""
+
+    def serve_step(params, cache, tokens, pos):
+        if cfg.input_mode == "embeddings":
+            batch = {"embeddings": tokens}     # [B,1,D] stub frontend
+        else:
+            batch = {"tokens": tokens}
+        logits, new_cache = M.decode_step(params, cache, batch, pos, cfg,
+                                          rules, unroll=unroll)
+        lf = logits.astype(jnp.float32)
+        if cfg.vocab_size < cfg.vocab_padded:
+            pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+            lf = jnp.where(pad, -jnp.inf, lf)
+        nxt = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+        return nxt, new_cache, logits
+
+    return serve_step
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # [P] (or [P, n_codebooks])
+    max_new: int = 16
+    eos_id: int | None = None
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Batched greedy decoding over fixed slots (static shapes).
+
+    Rounds: admit up to B requests, right-align nothing — all slots share
+    the step position; shorter prompts emit pad tokens that are masked out
+    of their transcript. Decode proceeds until every admitted request hit
+    ``max_new`` or EOS. This is static batching with per-row masking — the
+    TPU-friendly core that continuous batching schedulers wrap.
+    """
+
+    def __init__(self, cfg, rules, params, batch: int, max_seq: int,
+                 pad_id: int = 0):
+        self.cfg = cfg
+        self.rules = rules
+        self.params = params
+        self.B = batch
+        self.max_seq = max_seq
+        self.pad_id = pad_id
+        self.step_fn = jax.jit(make_serve_step(cfg, rules),
+                               donate_argnums=(1,))
+
+    def _fresh_cache(self):
+        return M.init_cache(self.cfg, self.B, self.max_seq, self.rules)
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        cfg = self.cfg
+        for base in range(0, len(requests), self.B):
+            group = requests[base:base + self.B]
+            self._run_group(group)
+        return requests
+
+    def _run_group(self, group: list) -> None:
+        cfg = self.cfg
+        B = self.B
+        plens = [len(r.prompt) for r in group]
+        pmax = max(plens)
+        tok_shape = (B, pmax) if cfg.input_mode != "codebooks" else \
+            (B, pmax, cfg.n_codebooks)
+        toks = np.full(tok_shape, self.pad_id, np.int32)
+        for i, r in enumerate(group):
+            toks[i, :plens[i]] = r.prompt
+        cache = self._fresh_cache()
+        params = self.params
+        # prefill by stepping the decode path over the prompt (cache fills
+        # position by position; static shapes)
+        assert pmax >= 1, "empty prompts unsupported"
+        cur = None
+        for p in range(pmax):
+            cur, cache, _ = self.step_fn(params, cache,
+                                         jnp.asarray(toks[:, p:p + 1]),
+                                         jnp.int32(p))
+        max_new = max(r.max_new for r in group)
+        done = np.zeros(B, bool)
+        for t in range(max_new):
+            pos = pmax + t
+            if pos >= self.max_seq:
+                break
+            for i, r in enumerate(group):
+                if not done[i] and t < r.max_new:
+                    tok = np.asarray(jax.device_get(cur))[i]
+                    tok_val = int(tok.reshape(-1)[0])
+                    r.out.append(tok_val)
+                    if r.eos_id is not None and tok_val == r.eos_id:
+                        done[i] = True
+                elif t >= r.max_new:
+                    done[i] = True
+            if done.all():
+                break
+            cur, cache, _ = self.step_fn(params, cache, cur, jnp.int32(pos))
+        for r in group:
+            r.done = True

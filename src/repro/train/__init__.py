@@ -1,0 +1,3 @@
+from .step import (TrainHParams, make_train_step, init_train_state,
+                   abstract_train_state, train_state_logical_specs)
+from .trainer import Trainer, TrainerConfig

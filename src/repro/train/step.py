@@ -1,0 +1,193 @@
+"""Train-step factory: grad-accumulation scan, remat, z-loss, gradient
+compression, and the balanced-k-means MoE router state (paper Eq. 1)
+threaded functionally through the step.
+
+The returned ``train_step(state, batch)`` is a pure jittable function;
+``state`` is a plain pytree (params / opt / influence / error-feedback), so
+it shards, checkpoints and reshards uniformly.
+
+Distributed-optimization tricks (DESIGN.md §7):
+
+* microbatch grad accumulation via ``lax.scan`` (pipelining-friendly; XLA
+  overlaps the per-microbatch FSDP all-gathers with compute);
+* gradient compression — accumulated grads are cast to bf16 or stochastic-
+  rounded int8 *before* the optimizer consumes them, which is the point
+  where GSPMD inserts the data-parallel reduction, halving/quartering DP
+  collective bytes; an error-feedback buffer keeps the update unbiased;
+* optimizer moments in bf16 for the 400B-class configs (model config).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models import moe as MOE
+from repro.optim import AdamWConfig, adamw_init, adamw_update, make_schedule
+
+
+@dataclass(frozen=True)
+class TrainHParams:
+    microbatches: int = 1
+    z_loss: float = 1e-4
+    remat: bool = True
+    unroll: bool = False                 # python-unroll layers (exact dry-run FLOPs)
+    grad_acc_dtype: str = "float32"      # bf16 for the 400B class: grads of
+    #                                      bf16 params are natively bf16; an
+    #                                      f32 accumulator doubles their HBM
+    grad_compress: str = "none"          # none | bf16 | int8
+    lr_kind: str = "cosine"
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    adamw: AdamWConfig = AdamWConfig()
+
+
+def init_train_state(cfg, key, hp: TrainHParams):
+    params = M.init_params(cfg, key)
+    opt = adamw_init(params, _adamw_cfg(cfg, hp))
+    state = {"params": params, "opt": opt}
+    rs = MOE.init_router_state(cfg)
+    if rs is not None:
+        state["influence"] = rs["influence"]
+    if hp.grad_compress in ("bf16", "int8"):
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def abstract_train_state(cfg, hp: TrainHParams):
+    """ShapeDtypeStruct mirror of init_train_state (dry-run, no alloc)."""
+    params = M.abstract_params(cfg)
+    mdt = jnp.dtype(_adamw_cfg(cfg, hp).moment_dtype)
+    mom = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, mdt), params)
+    state = {"params": params,
+             "opt": {"mu": mom, "nu": mom,
+                     "step": jax.ShapeDtypeStruct((), jnp.int32)}}  # noqa
+    n_moe = sum(1 for s in cfg.pattern if s.mlp == "moe")
+    if cfg.moe is not None and cfg.moe.router == "balanced_kmeans" and n_moe:
+        state["influence"] = jax.ShapeDtypeStruct(
+            (cfg.n_repeats, n_moe, cfg.moe.n_experts), jnp.float32)
+    if hp.grad_compress in ("bf16", "int8"):
+        state["ef"] = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return state
+
+
+def train_state_logical_specs(cfg, hp: TrainHParams):
+    pspec = M.param_logical_specs(cfg)
+    state = {"params": pspec,
+             "opt": {"mu": pspec, "nu": pspec, "step": ()}}
+    n_moe = sum(1 for s in cfg.pattern if s.mlp == "moe")
+    if cfg.moe is not None and cfg.moe.router == "balanced_kmeans" and n_moe:
+        state["influence"] = ("repeat", None, None)
+    if hp.grad_compress in ("bf16", "int8"):
+        state["ef"] = pspec
+    return state
+
+
+def _adamw_cfg(cfg, hp: TrainHParams) -> AdamWConfig:
+    return AdamWConfig(
+        b1=hp.adamw.b1, b2=hp.adamw.b2, eps=hp.adamw.eps,
+        weight_decay=hp.adamw.weight_decay, grad_clip=hp.adamw.grad_clip,
+        moment_dtype=cfg.moment_dtype)
+
+
+def _compress(g, ef, kind, key):
+    """Error-feedback compression. Returns (g_compressed_f32, new_ef)."""
+    if kind == "none":
+        return g, ef
+    gf = jax.tree.map(lambda x, e: x.astype(jnp.float32) + e, g, ef)
+    if kind == "bf16":
+        q = jax.tree.map(lambda x: x.astype(jnp.bfloat16), gf)
+    else:  # int8, stochastic rounding, per-tensor scale
+        leaves, treedef = jax.tree.flatten(gf)
+        qs = []
+        for i, x in enumerate(leaves):
+            scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+            noise = jax.random.uniform(jax.random.fold_in(key, i), x.shape) - 0.5
+            qi = jnp.clip(jnp.round(x / scale + noise), -127, 127)
+            qs.append(qi.astype(jnp.int8).astype(jnp.float32) * scale)
+        q = treedef.unflatten(qs)
+    deq = jax.tree.map(lambda x: x.astype(jnp.float32), q)
+    new_ef = jax.tree.map(lambda x, d: x - d, gf, deq)
+    return deq, new_ef
+
+
+def make_train_step(cfg, rules, hp: TrainHParams):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``batch``: {"tokens": [B, S] (or [B,S,n] codebooks / "embeddings"
+    [B,S,D]), "labels": [B, S](+)} with B divisible by hp.microbatches.
+    """
+    schedule = make_schedule(hp.lr_kind, hp.lr_peak, hp.warmup_steps,
+                             hp.total_steps)
+    acfg = _adamw_cfg(cfg, hp)
+    use_infl = cfg.moe is not None and cfg.moe.router == "balanced_kmeans" \
+        and any(s.mlp == "moe" for s in cfg.pattern)
+
+    def loss_fn(params, mb, influence):
+        logits, new_infl, stats = M.forward(
+            params, mb, cfg, rules, unroll=hp.unroll, remat=hp.remat,
+            influence=influence)
+        loss = M.loss_fn(logits, mb["labels"], cfg, z_loss=hp.z_loss)
+        return loss, (new_infl, stats)
+
+    def train_step(state, batch):
+        params = state["params"]
+        infl = state.get("influence")
+        mbs = hp.microbatches
+
+        def split(x):
+            return x.reshape(mbs, x.shape[0] // mbs, *x.shape[1:])
+        micro = jax.tree.map(split, batch)
+
+        acc_dt = jnp.dtype(hp.grad_acc_dtype)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+        def mb_body(carry, mb):
+            gacc, infl_c, loss_acc, drop_acc = carry
+            (loss, (ninf, st)), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb, infl_c)
+            gacc = jax.tree.map(lambda a, b: a + b.astype(acc_dt),
+                                gacc, g)
+            infl_n = ninf if use_infl else infl_c
+            return (gacc, infl_n, loss_acc + loss,
+                    drop_acc + st["moe_dropped_frac"]), None
+
+        carry0 = (g0, infl, jnp.float32(0.0), jnp.float32(0.0))
+        if hp.unroll:
+            # roofline programs python-unroll the accumulation so
+            # cost_analysis counts every microbatch's FLOPs
+            carry = carry0
+            for i in range(mbs):
+                carry, _ = mb_body(carry, jax.tree.map(lambda x: x[i],
+                                                       micro))
+            gacc, new_infl, loss_sum, drop_sum = carry
+        else:
+            (gacc, new_infl, loss_sum, drop_sum), _ = jax.lax.scan(
+                mb_body, carry0, micro)
+        grads = jax.tree.map(lambda g: g / mbs, gacc)
+
+        key = jax.random.fold_in(jax.random.PRNGKey(17),
+                                 state["opt"]["step"])
+        ef = state.get("ef")
+        grads, new_ef = _compress(grads, ef, hp.grad_compress, key)
+
+        lr = schedule(state["opt"]["step"])
+        new_params, new_opt, ostats = adamw_update(
+            params, grads, state["opt"], acfg, lr)
+        new_state = dict(state, params=new_params, opt=new_opt)
+        if use_infl:
+            new_state["influence"] = new_infl
+        if ef is not None:
+            new_state["ef"] = new_ef
+        metrics = {"loss": loss_sum / mbs,
+                   "moe_dropped_frac": drop_sum / mbs,
+                   "grad_norm": ostats["grad_norm"], "lr": lr,
+                   "step": new_opt["step"]}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,86 @@
+"""Fault-tolerant training loop.
+
+* resumes from the latest complete checkpoint (manifest-validated);
+* periodic + on-exception checkpointing (preemption-safe: SIGTERM-style
+  interruptions save before exit);
+* one-deep host prefetch (input-side straggler hide);
+* metrics history kept on host, loss logged every ``log_every``.
+
+The loop owns no model logic — it drives the pure ``train_step`` built by
+``train/step.py`` with whatever sharding ``rules`` the caller resolved,
+so the same Trainer runs the CPU smoke configs and the production mesh.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.pipeline import Prefetcher
+from .step import TrainHParams, init_train_state, make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0               # 0 = only final
+    ckpt_dir: str | None = None
+    keep_n: int = 3
+    async_ckpt: bool = False
+    resume: bool = True
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg, rules, hp: TrainHParams, tc: TrainerConfig):
+        self.cfg = cfg
+        self.rules = rules
+        self.hp = hp
+        self.tc = tc
+        self.step_fn = jax.jit(make_train_step(cfg, rules, hp), donate_argnums=0)
+        self.ckpt = (CheckpointManager(tc.ckpt_dir, tc.keep_n, tc.async_ckpt)
+                     if tc.ckpt_dir else None)
+        self.history: list[dict] = []
+
+    def init_or_resume(self):
+        state = init_train_state(self.cfg, jax.random.PRNGKey(self.tc.seed),
+                                 self.hp)
+        start = 0
+        if self.ckpt and self.tc.resume and self.ckpt.latest_step() is not None:
+            state, start = self.ckpt.restore(state)
+        return state, start
+
+    def fit(self, data_iter, state=None, start_step: int | None = None):
+        if state is None:
+            state, start_step = self.init_or_resume()
+        elif start_step is None:
+            start_step = int(jax.device_get(state["opt"]["step"]))
+        data = iter(Prefetcher(data_iter))
+        step = start_step
+        t0 = time.perf_counter()
+        try:
+            while step < self.tc.steps:
+                batch = next(data)
+                state, metrics = self.step_fn(state, batch)
+                step += 1
+                if step % self.tc.log_every == 0 or step == self.tc.steps:
+                    m = {k: float(np.asarray(jax.device_get(v)))
+                         for k, v in metrics.items()}
+                    m["wall_s"] = time.perf_counter() - t0
+                    self.history.append(m)
+                if (self.ckpt and self.tc.ckpt_every
+                        and step % self.tc.ckpt_every == 0):
+                    self.ckpt.save(step, state)
+        except (KeyboardInterrupt, SystemExit):
+            if self.ckpt:                       # preemption: save and re-raise
+                self.ckpt.save(step, state)
+                self.ckpt.wait()
+            raise
+        if self.ckpt:
+            self.ckpt.save(step, state)
+            self.ckpt.wait()
+        return state, self.history

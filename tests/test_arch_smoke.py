@@ -1,0 +1,205 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU).
+
+For each of the 10 assigned archs: instantiate the SMOKE config, run one
+forward + grad (train path) and a short decode, asserting output shapes
+and absence of NaNs. The FULL configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.dist.rules import resolve_rules
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.models import moe as MOE
+
+MESH = make_host_mesh()
+
+
+def make_batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.input_mode == "tokens":
+        toks = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+        labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                             jnp.int32)
+    elif cfg.input_mode == "codebooks":
+        toks = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S, cfg.n_codebooks)),
+            jnp.int32)}
+        labels = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S, cfg.n_codebooks)),
+            jnp.int32)
+    else:
+        toks = {"embeddings": jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)), jnp.float32)}
+        labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                             jnp.int32)
+    return toks, labels
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_forward_and_grad(arch):
+    cfg = configs.get_config(arch, smoke=True)
+    rules = resolve_rules(MESH, cfg, "train")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch, labels = make_batch(cfg)
+    rs = MOE.init_router_state(cfg)
+    infl = None if rs is None else rs["influence"]
+
+    def loss(p):
+        logits, ninf, stats = M.forward(p, batch, cfg, rules, influence=infl)
+        if cfg.input_mode == "codebooks":
+            assert logits.shape == (2, 32, cfg.n_codebooks, cfg.vocab_padded)
+        else:
+            assert logits.shape == (2, 32, cfg.vocab_padded)
+        return M.loss_fn(logits, labels, cfg)
+
+    val, g = jax.jit(jax.value_and_grad(loss))(params)
+    assert np.isfinite(float(val))
+    gn = sum(jnp.sum(jnp.abs(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(g))
+    assert np.isfinite(float(gn)) and float(gn) > 0.0
+    # loss near uniform at init (sanity on the padded-vocab masking)
+    assert float(val) < np.log(cfg.vocab_size) + 2.0
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_scan_unroll_agree(arch):
+    """Scanned and python-unrolled stacks must produce identical logits —
+    the roofline extrapolation relies on the unrolled path being the same
+    program."""
+    cfg = configs.get_config(arch, smoke=True)
+    rules = resolve_rules(MESH, cfg, "train")
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    batch, _ = make_batch(cfg, seed=1)
+    l1, _, _ = jax.jit(lambda p: M.forward(p, batch, cfg, rules,
+                                           unroll=False, remat=False))(params)
+    l2, _, _ = jax.jit(lambda p: M.forward(p, batch, cfg, rules,
+                                           unroll=True, remat=False))(params)
+    # identical math; XLA fuses scan vs straight-line differently, so bf16
+    # accumulation order differs by a few ulp — structural divergence would
+    # be O(1), far above this tolerance
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32),
+                               rtol=5e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_decode_matches_prefill(arch):
+    """Greedy decode-with-cache over a prompt must produce the same logits
+    as the full (teacher-forced) forward — validates the KV/SSM cache path
+    of every architecture."""
+    if configs.get_config(arch, smoke=True).input_mode == "embeddings":
+        pytest.skip("VLM stub decodes from embeddings; parity covered by "
+                    "test below")
+    cfg = configs.get_config(arch, smoke=True)
+    if cfg.moe is not None:
+        # teacher-forced forward drops tokens at expert capacity, decode
+        # (one token per row) never does — compare drop-free
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    rules_t = resolve_rules(MESH, cfg, "train")
+    rules_d = resolve_rules(MESH, cfg, "decode")
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    B, S = 2, 16
+    batch, _ = make_batch(cfg, B=B, S=S, seed=2)
+    full_logits, _, _ = jax.jit(
+        lambda p: M.forward(p, batch, cfg, rules_t, remat=False))(params)
+
+    cache = M.init_cache(cfg, B, S, rules_d)
+    step = jax.jit(lambda p, c, t, pos:
+                   M.decode_step(p, c, {"tokens": t}, pos, cfg, rules_d))
+    outs = []
+    for t in range(S):
+        tok = batch["tokens"][:, t:t + 1]
+        lg, cache = step(params, cache, tok, jnp.int32(t))
+        outs.append(lg)
+    dec_logits = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_decode_embeddings_mode():
+    """internvl2 (embeddings stub): decode parity against forward."""
+    cfg = configs.get_config("internvl2_76b", smoke=True)
+    rules_t = resolve_rules(MESH, cfg, "train")
+    rules_d = resolve_rules(MESH, cfg, "decode")
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    B, S = 2, 8
+    batch, _ = make_batch(cfg, B=B, S=S, seed=3)
+    full_logits, _, _ = jax.jit(
+        lambda p: M.forward(p, batch, cfg, rules_t, remat=False))(params)
+    cache = M.init_cache(cfg, B, S, rules_d)
+    step = jax.jit(lambda p, c, e, pos:
+                   M.decode_step(p, c, {"embeddings": e}, pos, cfg, rules_d))
+    outs = []
+    for t in range(S):
+        emb = batch["embeddings"][:, t:t + 1]
+        lg, cache = step(params, cache, emb, jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("arch", ["gemma3_1b", "jamba_1p5_large_398b",
+                                  "rwkv6_3b"])
+def test_prefill_then_decode(arch):
+    """prefill() must hand decode_step a cache equivalent to stepping
+    token-by-token (the serving handoff)."""
+    cfg = configs.get_config(arch, smoke=True)
+    rules = resolve_rules(MESH, cfg, "decode")
+    params = M.init_params(cfg, jax.random.PRNGKey(4))
+    B, P, EXTRA = 2, 16, 4
+    batch, _ = make_batch(cfg, B=B, S=P, seed=4)
+    logits_p, cache = jax.jit(
+        lambda p, b: M.prefill(p, b, cfg, rules))(params, batch)
+    assert logits_p.shape[1] == 1
+    cache = M.extend_cache(cache, cfg, P + EXTRA)
+    step = jax.jit(lambda p, c, t, pos:
+                   M.decode_step(p, c, {"tokens": t}, pos, cfg, rules))
+    # reference: token-by-token from scratch
+    cache2 = M.init_cache(cfg, B, P + EXTRA, rules)
+    for t in range(P):
+        lg2, cache2 = step(params, cache2,
+                           batch["tokens"][:, t:t + 1], jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits_p, np.float32),
+                               np.asarray(lg2, np.float32),
+                               rtol=5e-2, atol=5e-2)
+    tok = jnp.argmax(logits_p[..., :cfg.vocab_size], -1).astype(jnp.int32)
+    lg_a, cache = step(params, cache, tok, jnp.int32(P))
+    lg_b, cache2 = step(params, cache2, tok, jnp.int32(P))
+    np.testing.assert_allclose(np.asarray(lg_a, np.float32),
+                               np.asarray(lg_b, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_param_counts_match_class():
+    """Full configs land in the advertised parameter class."""
+    expect = {"starcoder2_7b": (6e9, 9e9),
+              "phi4_mini_3p8b": (3e9, 5e9),
+              "phi3_mini_3p8b": (3e9, 4.6e9),
+              "gemma3_1b": (0.7e9, 1.6e9),
+              "musicgen_large": (1.5e9, 3e9),
+              "jamba_1p5_large_398b": (330e9, 450e9),
+              "llama4_maverick_400b_a17b": (350e9, 450e9),
+              "granite_moe_3b_a800m": (2.5e9, 4e9),
+              "rwkv6_3b": (2.5e9, 4e9),
+              "internvl2_76b": (60e9, 80e9)}
+    for arch, (lo, hi) in expect.items():
+        n = configs.get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_active_params_moe():
+    cfg = configs.get_config("llama4_maverick_400b_a17b")
+    act = cfg.active_param_count()
+    assert 12e9 <= act <= 25e9            # "a17b"
+    g = configs.get_config("granite_moe_3b_a800m")
+    assert 0.5e9 <= g.active_param_count() <= 1.2e9

@@ -1,0 +1,134 @@
+"""Balanced k-means system invariants (paper Sections 4-5)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balanced_kmeans import (BKMConfig, adapt_influence,
+                                        erode_influence, balanced_kmeans,
+                                        assign_effective)
+from repro.core.partitioner import geographer_partition
+from repro.core import metrics
+
+
+def test_balance_achieved_uniform():
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(0, 1, (8000, 2))
+    k = 16
+    part, stats = geographer_partition(pts, k, return_stats=True)
+    assert stats["final_imbalance"] <= 0.03 + 1e-6
+    assert len(np.unique(part)) == k
+
+
+def test_balance_achieved_heterogeneous():
+    """Paper §4.2: heterogeneous densities need erosion; balance must hold."""
+    rng = np.random.default_rng(1)
+    dense = rng.normal(0.2, 0.03, (6000, 2))
+    sparse = rng.uniform(0, 1, (2000, 2))
+    pts = np.concatenate([dense, sparse])
+    part, stats = geographer_partition(pts, 8, return_stats=True)
+    assert stats["final_imbalance"] <= 0.03 + 1e-6
+
+
+def test_balance_weighted_25d():
+    """2.5D case: node weights (vertical columns) must balance, not counts."""
+    rng = np.random.default_rng(2)
+    pts = rng.uniform(0, 1, (6000, 2))
+    w = 1.0 + 30.0 * np.exp(-((pts - 0.5) ** 2).sum(1) / 0.02)
+    k = 8
+    part = geographer_partition(pts, k, weights=w)
+    imb = metrics.imbalance(part, k, w)
+    assert imb <= 0.05  # weighted balance
+
+def test_3d_balance():
+    rng = np.random.default_rng(3)
+    pts = rng.uniform(0, 1, (8000, 3))
+    part, stats = geographer_partition(pts, 8, return_stats=True)
+    assert stats["final_imbalance"] <= 0.03 + 1e-6
+
+
+def test_skip_fraction_matches_paper_claim():
+    """Paper §4.3: bounds skip the inner loop in ~80% of cases, more in
+    later phases."""
+    rng = np.random.default_rng(4)
+    pts = rng.uniform(0, 1, (20000, 2))
+    _, stats = geographer_partition(pts, 16, return_stats=True)
+    h = stats["history"]["skip_fraction"]
+    it = int(stats["iters"])
+    late = h[max(it - 5, 0):it]
+    assert late.mean() > 0.6, f"late-phase skip fraction too low: {late}"
+    # later phases skip more than the first post-warmup rounds on average
+    assert h[:it][-3:].mean() >= h[:it][:3].mean() - 0.1
+
+
+def test_influence_update_direction():
+    """Eq. (1) corrected: oversized -> influence down, undersized -> up."""
+    infl = jnp.ones(3)
+    sizes = jnp.array([2.0, 1.0, 0.5])
+    target = jnp.array(1.0)
+    new, factor = adapt_influence(infl, sizes, target, d_eff=2, clip=0.05)
+    assert new[0] < 1.0 and new[2] > 1.0 and abs(new[1] - 1.0) < 1e-6
+    # 5% clip respected
+    assert jnp.all(jnp.abs(new / infl - 1.0) <= 0.05 + 1e-6)
+
+
+def test_erosion_limits():
+    """Eqs. (2)-(3): no movement -> unchanged; huge movement -> back to ~1."""
+    infl = jnp.array([4.0, 0.25])
+    same = erode_influence(infl, jnp.zeros(2), jnp.array(1.0))
+    np.testing.assert_allclose(np.asarray(same), np.asarray(infl), rtol=1e-6)
+    far = erode_influence(infl, jnp.full(2, 100.0), jnp.array(1.0))
+    np.testing.assert_allclose(np.asarray(far), 1.0, atol=0.05)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_bounds_soundness(seed):
+    """Hamerly property: whenever ub < lb, the cached assignment equals the
+    freshly computed one (this is what makes the skip correct)."""
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.uniform(0, 1, (500, 2)), jnp.float32)
+    ctr = jnp.asarray(rng.uniform(0, 1, (8, 2)), jnp.float32)
+    infl = jnp.asarray(rng.uniform(0.8, 1.25, (8,)), jnp.float32)
+    idx, best, second = assign_effective(pts, ctr, infl)
+    # simulate a small center movement + influence change, relax bounds
+    delta = jnp.asarray(rng.uniform(0, 0.02, (8,)), jnp.float32)
+    moved = ctr + delta[:, None] / np.sqrt(2)
+    infl_new = infl * jnp.asarray(rng.uniform(0.96, 1.04, (8,)), jnp.float32)
+    ratio = infl / infl_new
+    ub = best * ratio[idx] + delta[idx] / infl_new[idx]
+    lb = jnp.maximum(second * jnp.min(ratio) - jnp.max(delta / infl_new), 0.0)
+    idx2, _, _ = assign_effective(pts, moved, infl_new)
+    skip = np.asarray(ub < lb)
+    same = np.asarray(idx == idx2)
+    assert np.all(same[skip]), "bound-skipped point changed cluster!"
+
+
+def test_final_assignment_exact_not_sampled():
+    """The returned assignment must cover all points (warm-up sampling must
+    not leak into the final result)."""
+    rng = np.random.default_rng(6)
+    pts = rng.uniform(0, 1, (5000, 2))
+    part = geographer_partition(pts, 4)
+    assert part.shape == (5000,)
+    assert set(np.unique(part)) <= set(range(4))
+
+
+def test_voronoi_compactness_vs_sfc():
+    """Shape quality: balanced k-means blocks should have smaller average
+    spatial radius than SFC chunks (the paper's motivation)."""
+    from repro.core.baselines import sfc_partition
+    rng = np.random.default_rng(7)
+    pts = rng.uniform(0, 1, (20000, 2))
+    k = 16
+
+    def mean_radius(part):
+        r = 0.0
+        for b in range(k):
+            sub = pts[part == b]
+            r += np.linalg.norm(sub - sub.mean(0), axis=1).mean()
+        return r / k
+
+    pg = geographer_partition(pts, k)
+    ps = sfc_partition(pts, k)
+    assert mean_radius(pg) <= mean_radius(ps) * 1.05

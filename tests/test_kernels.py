@@ -1,0 +1,79 @@
+"""Pallas assignment kernel vs pure-jnp oracle: shape/dtype sweeps +
+hypothesis property tests (interpret mode)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import assign_argmin
+from repro.kernels.ref import assign_argmin_ref
+
+
+def _rand(n, k, d, seed=0, spread=1.0):
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.uniform(0, spread, (n, d)), jnp.float32)
+    ctr = jnp.asarray(rng.uniform(0, spread, (k, d)), jnp.float32)
+    infl = jnp.asarray(rng.uniform(0.5, 2.0, (k,)), jnp.float32)
+    return pts, ctr, infl
+
+
+@pytest.mark.parametrize("n,k,d,bp,bc", [
+    (1024, 64, 2, 256, 32),
+    (2048, 128, 3, 512, 128),
+    (777, 33, 2, 256, 32),      # padding on both axes
+    (512, 16, 16, 128, 16),     # MoE-routing-like dims
+    (256, 8, 128, 128, 8),      # high-dim (token-embedding routing)
+    (4096, 512, 2, 1024, 128),  # production tile shape
+])
+def test_kernel_matches_ref(n, k, d, bp, bc):
+    pts, ctr, infl = _rand(n, k, d)
+    i1, b1, s1 = assign_argmin(pts, ctr, infl, block_p=bp, block_c=bc)
+    i0, b0, s0 = assign_argmin_ref(pts, ctr, infl)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b0),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_kernel_uniform_influence_is_plain_kmeans():
+    """influence == 1 must reduce to vanilla nearest-center assignment."""
+    pts, ctr, _ = _rand(512, 32, 2, seed=3)
+    infl = jnp.ones(32, jnp.float32)
+    i1, b1, _ = assign_argmin(pts, ctr, infl, block_p=256, block_c=32)
+    d = jnp.sum((pts[:, None] - ctr[None]) ** 2, -1)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(jnp.argmin(d, 1)))
+
+
+def test_kernel_influence_monotonicity():
+    """Raising one cluster's influence can only gain it points (weighted
+    Voronoi property the balancing loop relies on)."""
+    pts, ctr, infl = _rand(2048, 16, 2, seed=4)
+    i_before, _, _ = assign_argmin(pts, ctr, infl, block_p=512, block_c=16)
+    infl2 = infl.at[3].mul(1.5)
+    i_after, _, _ = assign_argmin(pts, ctr, infl2, block_p=512, block_c=16)
+    before = set(np.where(np.asarray(i_before) == 3)[0].tolist())
+    after = set(np.where(np.asarray(i_after) == 3)[0].tolist())
+    assert before.issubset(after)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6),
+       st.sampled_from([(130, 17, 2), (257, 9, 3), (96, 5, 4)]))
+def test_kernel_property_random(seed, shape):
+    n, k, d = shape
+    pts, ctr, infl = _rand(n, k, d, seed=seed)
+    i1, b1, s1 = assign_argmin(pts, ctr, infl, block_p=64, block_c=8)
+    i0, b0, s0 = assign_argmin_ref(pts, ctr, infl)
+    # argmin ties can differ; compare effective distances instead
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b0),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0),
+                               rtol=1e-4, atol=1e-5)
+    assert float(jnp.mean((i1 == i0).astype(jnp.float32))) > 0.99
+
+
+def test_second_best_greater_equal_best():
+    pts, ctr, infl = _rand(1024, 64, 2, seed=7)
+    _, b, s = assign_argmin(pts, ctr, infl, block_p=256, block_c=32)
+    assert bool(jnp.all(s >= b - 1e-7))

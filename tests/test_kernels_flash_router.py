@@ -1,0 +1,140 @@
+"""Flash-attention and MoE-router Pallas kernels vs pure-jnp oracles
+(interpret mode): shape/dtype sweeps + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import flash_attention, router_topk
+from repro.kernels.ref import flash_attention_ref, router_topk_ref
+
+
+def _qkv(B, S, H, KV, dh, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, dh)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,S,H,KV,dh,bq,bk,softcap,dtype", [
+    (2, 256, 4, 4, 32, 128, 128, 0.0, jnp.float32),     # MHA
+    (1, 512, 8, 2, 64, 256, 128, 0.0, jnp.float32),     # GQA 4:1
+    (2, 384, 4, 1, 32, 128, 128, 0.0, jnp.float32),     # MQA + padding
+    (1, 256, 4, 4, 128, 128, 128, 50.0, jnp.float32),   # softcap (gemma)
+    (1, 256, 2, 2, 64, 128, 128, 0.0, jnp.bfloat16),    # bf16 io
+    (1, 300, 3, 1, 16, 128, 128, 0.0, jnp.float32),     # odd S, odd heads
+])
+def test_flash_matches_ref(B, S, H, KV, dh, bq, bk, softcap, dtype):
+    q, k, v = _qkv(B, S, H, KV, dh, dtype)
+    out = flash_attention(q, k, v, bq=bq, bk=bk, softcap=softcap)
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KV, S, dh)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KV, S, dh)
+    ref = flash_attention_ref(qh, kh, vh, softcap=softcap)
+    ref = ref.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_dense_path():
+    """Kernel agrees with the model's dense attention math (the path the
+    smoke tests run): same GQA grouping, same causal mask."""
+    from repro.models import layers as L
+    from repro.launch.mesh import make_host_mesh
+    from repro.dist.rules import resolve_rules
+    from repro import configs
+    cfg = configs.get_config("phi4_mini_3p8b", smoke=True)
+    B, S, H, KV, dh = 2, 128, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k, v = _qkv(B, S, H, KV, dh)
+    out = flash_attention(q, k, v, bq=128, bk=128)
+    scores = L._gqa_scores(q, k, cfg)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    ref = jnp.einsum("bkgst,btkd->bskgd", p, v).reshape(B, S, H, dh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    S=st.integers(130, 400),
+    H=st.integers(1, 6),
+    g=st.sampled_from([1, 2]),
+    dh=st.sampled_from([16, 32]),
+)
+def test_flash_property(S, H, g, dh):
+    KV = max(H // g, 1)
+    H = KV * g
+    q, k, v = _qkv(1, S, H, KV, dh, seed=S)
+    out = flash_attention(q, k, v, bq=128, bk=128)
+    qh = q.transpose(0, 2, 1, 3).reshape(H, S, dh)
+    kh = k.transpose(0, 2, 1, 3).reshape(KV, S, dh)
+    vh = v.transpose(0, 2, 1, 3).reshape(KV, S, dh)
+    ref = flash_attention_ref(qh, kh, vh)
+    ref = ref.reshape(1, H, S, dh).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE router kernel
+# ---------------------------------------------------------------------------
+
+def _router_inputs(T, E, D, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((T, D)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((E, D)), jnp.float32)
+    infl = jnp.asarray(rng.uniform(0.5, 2.0, (E,)), jnp.float32)
+    return x, c, infl
+
+
+@pytest.mark.parametrize("T,E,D,K,bt", [
+    (512, 8, 64, 1, 256),         # llama4-style top-1
+    (512, 16, 64, 2, 128),        # jamba top-2
+    (512, 40, 32, 8, 256),        # granite top-8, E padded 40->128
+    (300, 128, 128, 2, 128),      # T padding
+])
+def test_router_matches_ref(T, E, D, K, bt):
+    x, c, infl = _router_inputs(T, E, D)
+    idx, eff = router_topk(x, c, infl, top_k=K, bt=bt)
+    ridx, reff = router_topk_ref(x, c, 1.0 / (infl * infl), K)
+    np.testing.assert_allclose(np.asarray(eff), np.asarray(reff),
+                               rtol=1e-4, atol=1e-4)
+    # indices may differ only where effective distances tie
+    mismatch = np.asarray(idx) != np.asarray(ridx)
+    if mismatch.any():
+        np.testing.assert_allclose(np.asarray(eff)[mismatch],
+                                   np.asarray(reff)[mismatch],
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_router_uniform_influence_is_nearest_expert():
+    x, c, _ = _router_inputs(256, 16, 32, seed=3)
+    infl = jnp.ones(16)
+    idx, _ = router_topk(x, c, infl, top_k=1)
+    d = jnp.sum((x[:, None] - c[None]) ** 2, -1)
+    np.testing.assert_array_equal(np.asarray(idx[:, 0]),
+                                  np.asarray(jnp.argmin(d, 1)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(T=st.integers(64, 300), E=st.integers(2, 40),
+       K=st.integers(1, 4), D=st.sampled_from([8, 32]))
+def test_router_property(T, E, K, D):
+    K = min(K, E)
+    x, c, infl = _router_inputs(T, E, D, seed=T + E)
+    idx, eff = router_topk(x, c, infl, top_k=K, bt=64)
+    # effs ascend along k and are >= 0
+    e = np.asarray(eff)
+    assert (e >= -1e-6).all()
+    assert (np.diff(e, axis=1) >= -1e-5).all()
+    # idx are valid expert ids, distinct per token
+    i = np.asarray(idx)
+    assert ((i >= 0) & (i < E)).all()
+    for row in i:
+        assert len(set(row.tolist())) == K

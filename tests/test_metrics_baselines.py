@@ -1,0 +1,102 @@
+"""Graph metrics + baseline partitioners."""
+import numpy as np
+import pytest
+
+from repro.core import baselines, meshes, metrics
+
+
+@pytest.fixture(scope="module")
+def small_mesh():
+    return meshes.grid_triangulation(40, 40)
+
+
+def test_edge_cut_known_value(small_mesh):
+    """Vertical split of a 40x40 grid-triangulation: cut = ny + (ny-1) diag."""
+    part = (small_mesh.points[:, 0] >= 20).astype(np.int64)
+    cut = metrics.edge_cut(part, small_mesh.indptr, small_mesh.indices)
+    assert cut == 40 + 39  # right edges + diagonals crossing the split
+
+
+def test_comm_volume_two_blocks(small_mesh):
+    part = (small_mesh.points[:, 0] >= 20).astype(np.int64)
+    maxc, totc, per = metrics.comm_volume(part, small_mesh.indptr,
+                                          small_mesh.indices, 2)
+    # with 2 blocks, comm volume counts boundary vertices once each side
+    assert totc == per.sum()
+    assert maxc >= 40  # at least one column of boundary vertices per side
+    assert totc <= 4 * 40
+
+
+def test_imbalance_perfect():
+    part = np.repeat(np.arange(4), 25)
+    assert metrics.imbalance(part, 4) == 0.0
+
+
+def test_diameter_path_graph():
+    """Path graph diameter is exact for double-sweep BFS."""
+    n = 50
+    indptr = np.zeros(n + 1, np.int64)
+    rows, cols = [], []
+    for i in range(n - 1):
+        rows += [i, i + 1]
+        cols += [i + 1, i]
+    order = np.lexsort((cols, rows))
+    rows, cols = np.array(rows)[order], np.array(cols)[order]
+    np.add.at(indptr, rows + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    part = np.zeros(n, np.int64)
+    d = metrics.block_diameters(part, indptr, cols, 1)
+    assert d[0] == n - 1
+
+
+def test_disconnected_block_inf_diameter(small_mesh):
+    part = np.zeros(small_mesh.n, np.int64)
+    # two far-apart single vertices in block 1 -> disconnected
+    part[0] = 1
+    part[-1] = 1
+    d = metrics.block_diameters(part, small_mesh.indptr, small_mesh.indices, 2)
+    assert np.isinf(d[1])
+
+
+@pytest.mark.parametrize("name", list(baselines.BASELINES))
+def test_baselines_balance_and_coverage(name):
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(0, 1, (4000, 2))
+    k = 16
+    part = baselines.BASELINES[name](pts, k)
+    assert part.shape == (4000,)
+    assert len(np.unique(part)) == k
+    assert metrics.imbalance(part, k) <= 0.05
+
+
+@pytest.mark.parametrize("name", list(baselines.BASELINES))
+def test_baselines_weighted(name):
+    rng = np.random.default_rng(1)
+    pts = rng.uniform(0, 1, (4000, 2))
+    w = rng.uniform(0.5, 4.0, 4000)
+    part = baselines.BASELINES[name](pts, 8, w)
+    assert metrics.imbalance(part, 8, w) <= 0.25  # quantile cuts: coarse
+
+
+def test_mesh_generators():
+    for key in ["tri", "rgg2d", "delaunay2d", "refined2d", "climate25d"]:
+        m = meshes.REGISTRY[key](2500)
+        assert m.n >= 2400
+        assert m.indices.max() < m.n
+        deg = np.diff(m.indptr)
+        assert deg.mean() > 2.0, f"{key} too sparse: {deg.mean()}"
+        # symmetry: every edge appears both ways
+        src = np.repeat(np.arange(m.n), deg)
+        fwd = set(zip(src.tolist(), m.indices.tolist()))
+        assert all((b, a) in fwd for a, b in list(fwd)[:200])
+    m = meshes.REGISTRY["rgg3d"](2000)
+    assert m.dim == 3
+
+
+def test_rcb_powers_of_two_and_odd_k():
+    rng = np.random.default_rng(2)
+    pts = rng.uniform(0, 1, (3000, 2))
+    for k in [3, 5, 7, 12]:
+        part = baselines.rcb(pts, k)
+        assert len(np.unique(part)) == k
+        assert metrics.imbalance(part, k) < 0.1

@@ -1,0 +1,78 @@
+"""Hilbert SFC properties: locality, bijectivity on grids, np/jnp agreement."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sfc import (hilbert_index_np, hilbert_index_jnp,
+                            sfc_initial_centers)
+
+
+@pytest.mark.parametrize("dim", [2, 3])
+def test_locality(dim):
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(0, 1, (4000, dim))
+    keys = hilbert_index_np(pts)
+    order = np.argsort(keys)
+    d_sorted = np.linalg.norm(np.diff(pts[order], axis=0), axis=1).mean()
+    d_rand = np.linalg.norm(np.diff(pts, axis=0), axis=1).mean()
+    assert d_sorted < 0.3 * d_rand
+
+
+def test_bijective_on_grid_2d():
+    """Every cell of a 2^b x 2^b grid gets a distinct key covering 0..4^b-1."""
+    b = 4
+    g = np.arange(2 ** b)
+    xs, ys = np.meshgrid(g, g, indexing="ij")
+    pts = np.stack([xs.ravel(), ys.ravel()], 1).astype(np.float64)
+    pts = pts / (2 ** b - 1) * (1 - 2 ** -b) + 2 ** -(b + 1)  # cell centers
+    keys = hilbert_index_np(pts, bits=b)
+    assert len(np.unique(keys)) == 4 ** b
+    assert keys.min() == 0 and keys.max() == 4 ** b - 1
+
+
+def test_curve_is_continuous_2d():
+    """Consecutive Hilbert indices map to grid-adjacent cells."""
+    b = 4
+    g = np.arange(2 ** b)
+    xs, ys = np.meshgrid(g, g, indexing="ij")
+    cells = np.stack([xs.ravel(), ys.ravel()], 1).astype(np.float64)
+    pts = cells / (2 ** b - 1) * (1 - 2 ** -b) + 2 ** -(b + 1)
+    keys = hilbert_index_np(pts, bits=b)
+    order = np.argsort(keys)
+    steps = np.abs(np.diff(cells[order], axis=0)).sum(axis=1)
+    assert np.all(steps == 1), "Hilbert curve must step to an adjacent cell"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31), st.integers(2, 3))
+def test_np_jnp_rank_agreement(seed, dim):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(-5, 7, (256, dim))
+    k_np = hilbert_index_np(pts)
+    k_j = np.asarray(hilbert_index_jnp(jnp.asarray(pts, jnp.float32)))
+    r_np = np.argsort(np.argsort(k_np, kind="stable"), kind="stable")
+    r_j = np.argsort(np.argsort(k_j, kind="stable"), kind="stable")
+    corr = np.corrcoef(r_np, r_j)[0, 1]
+    assert corr > 0.99
+
+
+def test_initial_centers_spread():
+    rng = np.random.default_rng(1)
+    pts = rng.uniform(0, 1, (10000, 2))
+    c = sfc_initial_centers(pts, 16)
+    assert c.shape == (16, 2)
+    # centers should be well spread: min pairwise distance not tiny
+    d = np.linalg.norm(c[:, None] - c[None, :], axis=-1)
+    d[np.arange(16), np.arange(16)] = np.inf
+    assert d.min() > 0.05
+
+
+def test_initial_centers_weighted():
+    rng = np.random.default_rng(2)
+    pts = np.concatenate([rng.uniform(0, 0.1, (1000, 2)),
+                          rng.uniform(0.9, 1.0, (1000, 2))])
+    w = np.concatenate([np.full(1000, 100.0), np.full(1000, 1.0)])
+    c = sfc_initial_centers(pts, 8, w)
+    # nearly all centers should sit in the heavy cluster
+    assert (c < 0.2).all(axis=1).sum() >= 6
