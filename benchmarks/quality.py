@@ -1,6 +1,9 @@
 """Paper Tables 1-2 + Figure 2 analogue: partition quality of Geographer
 (balanced k-means) vs the geometric baselines (RCB / RIB / HSFC / MJ) over
-2D / 2.5D-weighted / 3D mesh classes.
+2D / 2.5D-weighted / 3D mesh classes — all through the unified engine
+(``repro.partition.partition(problem, method=...)``), plus the
+hierarchical k = k1 x k2 mode (coarse Geographer + batched vmap
+refinement) as its own tool row.
 
 Metrics per (mesh, tool): wall time, edge cut, max/total communication
 volume, diameter (harmonic mean over blocks), imbalance — the paper's
@@ -12,13 +15,8 @@ Geographer baseline.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import baselines as BL
 from repro.core import meshes as MESH
-from repro.core import metrics as MET
-from repro.core.balanced_kmeans import BKMConfig
-from repro.core.partitioner import geographer_partition
+from repro.partition import PartitionProblem, factor_k, partition
 
 from .common import geomean, md_table, save_json, timer
 
@@ -32,15 +30,14 @@ METRICS = ["cut", "maxCommVol", "totalCommVol", "diameter_harmonic_mean"]
 
 
 def run_tool(tool: str, mesh, k: int, seed: int = 0):
+    prob = PartitionProblem.from_mesh(mesh, k, epsilon=0.03, seed=seed)
     t0 = timer()
-    if tool == "geographer":
-        part = geographer_partition(mesh.points, k, weights=mesh.weights,
-                                    cfg=BKMConfig(k=k, epsilon=0.03),
-                                    seed=seed)
+    if tool == "hierarchical":
+        res = partition(prob, hierarchy=factor_k(k))
     else:
-        part = BL.BASELINES[tool](mesh.points, k, mesh.weights)
+        res = partition(prob, method=tool)
     dt = timer() - t0
-    ev = MET.evaluate_partition(mesh, part, k, with_diameter=True)
+    ev = dict(res.evaluate(with_diameter=True))
     ev.update(tool=tool, time_s=dt, graph=mesh.name, k=k, n=mesh.n)
     return ev
 
@@ -48,7 +45,7 @@ def run_tool(tool: str, mesh, k: int, seed: int = 0):
 def run(n: int = 20_000, k: int = 32, seeds=(0,), quick: bool = False):
     if quick:
         n, k, seeds = 6_000, 16, (0,)
-    tools = ["geographer", "rcb", "rib", "hsfc", "mj"]
+    tools = ["geographer", "hierarchical", "rcb", "rib", "hsfc", "mj"]
     rows = []
     for cls, gens in CLASSES.items():
         for g in gens:

@@ -2,9 +2,21 @@
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only quality,...]
 
+All partitioning benchmarks go through the unified engine
+(``repro.partition``)::
+
+    prob = PartitionProblem.from_mesh(mesh, k, epsilon=0.03)
+    res  = partition(prob, method="geographer")     # or rcb/rib/sfc/mj
+    res  = partition(prob, hierarchy=(8, 8))        # hierarchical k1 x k2
+
+so every tool row is one ``partition(problem, method=...)`` call and the
+hierarchical (coarse Geographer + batched vmap refinement) mode appears
+as its own row/column where applicable.
+
 Modules:
-  quality    — Tables 1-2 + Fig 2 (partition quality vs RCB/RIB/HSFC/MJ)
-  scaling    — Fig 3a/3b (weak/strong scaling of the partitioner)
+  quality    — Tables 1-2 + Fig 2 (partition quality vs RCB/RIB/HSFC/MJ
+               + hierarchical k1xk2)
+  scaling    — Fig 3a/3b (weak/strong scaling; flat vs hierarchical)
   components — §5.3.2 component shares + §4.3 bound-skip-rate claim
   moe_router — paper Eq. (1) as MoE load balancing (framework integration)
   roofline   — §Roofline/§Dry-run aggregation from results/dryrun/*.json

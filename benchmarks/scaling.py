@@ -1,4 +1,5 @@
-"""Paper Figure 3 + 4 analogue: scaling of the partitioner.
+"""Paper Figure 3 + 4 analogue: scaling of the partitioner, through the
+unified ``repro.partition`` engine.
 
 No MPI cluster exists in this container, so the paper's weak/strong axes
 map to what is measurable here:
@@ -7,7 +8,11 @@ map to what is measurable here:
   wall-time per partition call (Fig. 3a analogue; on one CPU the ideal
   curve is linear in n rather than flat — we report time / n alongside);
 * strong scaling — fixed n, growing k (Fig. 3b analogue: the paper also
-  grows k with p);
+  grows k with p), flat ``partition(method="geographer")`` vs
+  hierarchical ``partition(hierarchy=(k1, k2))`` — the hierarchical mode
+  replaces one k-center replicated k-means by a k1-center pass plus k1
+  batched k2-center subproblems in a single vmap dispatch, which is how
+  k scales past what one replicated-centers solve can hold;
 * SPMD scaling — the distributed shard_map partitioner over 2..8 forced
   host devices (communication structure identical to the MPI version:
   psum'd sizes/centers + all_to_all redistribution), reported as time and
@@ -18,8 +23,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import meshes as MESH
-from repro.core.balanced_kmeans import BKMConfig
-from repro.core.partitioner import geographer_partition
+from repro.partition import PartitionProblem, factor_k, partition
 
 from .common import md_table, save_json, timer
 
@@ -32,29 +36,42 @@ def weak_scaling(per_block: int = 1500, ks=(4, 8, 16, 32, 64),
     for k in ks:
         n = per_block * k
         mesh = MESH.REGISTRY["delaunay2d"](n, seed=1)
+        prob = PartitionProblem.from_mesh(mesh, k, epsilon=0.03)
         t0 = timer()
-        part = geographer_partition(mesh.points, k,
-                                    cfg=BKMConfig(k=k, epsilon=0.03))
+        res = partition(prob, method="geographer")
         dt = timer() - t0
         rows.append({"k": k, "n": n, "time_s": dt,
                      "us_per_point": dt / n * 1e6,
-                     "blocks_used": int(len(np.unique(part)))})
+                     "blocks_used": int(len(np.unique(res.labels)))})
         print(f"  weak k={k:4d} n={n:8d} t={dt:.2f}s")
     return rows
 
 
 def strong_scaling(n: int = 60_000, ks=(4, 8, 16, 32, 64, 128),
                    quick: bool = False):
+    """Flat vs hierarchical wall time as k grows at fixed n."""
     if quick:
         n, ks = 12_000, (4, 16, 64)
     mesh = MESH.REGISTRY["delaunay2d"](n, seed=2)
     rows = []
     for k in ks:
+        prob = PartitionProblem.from_mesh(mesh, k, epsilon=0.03)
         t0 = timer()
-        geographer_partition(mesh.points, k, cfg=BKMConfig(k=k, epsilon=0.03))
-        dt = timer() - t0
-        rows.append({"k": k, "n": n, "time_s": dt})
-        print(f"  strong k={k:4d} t={dt:.2f}s")
+        flat = partition(prob, method="geographer")
+        t_flat = timer() - t0
+        k1, k2 = factor_k(k)
+        if k2 > 1:
+            t0 = timer()
+            hier = partition(prob, hierarchy=(k1, k2))
+            t_hier = timer() - t0
+            imb_h = hier.imbalance()
+        else:
+            t_hier, imb_h = float("nan"), float("nan")
+        rows.append({"k": k, "n": n, "time_flat_s": t_flat,
+                     "time_hier_s": t_hier, "hier": f"{k1}x{k2}",
+                     "imb_flat": flat.imbalance(), "imb_hier": imb_h})
+        print(f"  strong k={k:4d} flat={t_flat:.2f}s "
+              f"hier[{k1}x{k2}]={t_hier:.2f}s")
     return rows
 
 
@@ -62,9 +79,11 @@ def run(quick: bool = False):
     print("\n### Fig 3a analogue — weak scaling (n/k fixed)\n")
     weak = weak_scaling(quick=quick)
     print(md_table(weak, ["k", "n", "time_s", "us_per_point"]))
-    print("\n### Fig 3b analogue — strong scaling (n fixed, k grows)\n")
+    print("\n### Fig 3b analogue — strong scaling (n fixed, k grows; "
+          "flat vs hierarchical k1xk2)\n")
     strong = strong_scaling(quick=quick)
-    print(md_table(strong, ["k", "n", "time_s"]))
+    print(md_table(strong, ["k", "hier", "time_flat_s", "time_hier_s",
+                            "imb_flat", "imb_hier"]))
     out = {"weak": weak, "strong": strong}
     save_json("scaling", out)
     return out

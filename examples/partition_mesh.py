@@ -1,41 +1,65 @@
-"""Full partitioning scenario: weighted 2.5D climate-style mesh (the
-paper's motivating application), all tools, per-phase stats, optional
-SPMD distributed run.
+"""Full partitioning scenario through the unified engine: weighted 2.5D
+climate-style mesh (the paper's motivating application), every registered
+method, hierarchical k = 8 x 8 recursion, and an optional SPMD
+distributed run.
 
     PYTHONPATH=src python examples/partition_mesh.py [--n 30000] [--k 64]
     PYTHONPATH=src python examples/partition_mesh.py --distributed
         (forces 8 host devices; run in a fresh process)
+
+The single-host path is three lines of API::
+
+    prob = PartitionProblem.from_mesh(mesh, k=64, epsilon=0.03)
+    res  = partition(prob, method="geographer")       # or rcb/rib/sfc/mj
+    res  = partition(prob, hierarchy=(8, 8))          # k1 x k2 recursive
+
+``hierarchy=(8, 8)`` cuts 8 coarse blocks with Geographer, then refines
+all 8 blocks into 8 sub-blocks each in ONE batched vmap dispatch; block b
+owns labels [8b, 8b+8) and the measured global imbalance still respects
+``epsilon``.
 """
 import argparse
-import sys
 import time
 
 import numpy as np
 
 
 def single_host(n: int, k: int):
-    from repro.core import baselines, meshes, metrics
-    from repro.core.balanced_kmeans import BKMConfig
-    from repro.core.partitioner import geographer_partition
+    from repro.core import meshes
+    from repro.partition import (PartitionProblem, available_methods,
+                                 factor_k, partition)
 
     mesh = meshes.REGISTRY["climate25d"](n, seed=0)
     print(f"mesh: {mesh.name} n={mesh.n} m={mesh.m} "
           f"(node weights: vertical column depth)")
-    tools = {"geographer": lambda: geographer_partition(
-        mesh.points, k, weights=mesh.weights,
-        cfg=BKMConfig(k=k, epsilon=0.03))}
-    for name, fn in baselines.BASELINES.items():
-        tools[name] = lambda fn=fn: fn(mesh.points, k, mesh.weights)
+    prob = PartitionProblem.from_mesh(mesh, k, epsilon=0.03)
 
-    for name, fn in tools.items():
+    for name in available_methods():
         t0 = time.perf_counter()
-        part = fn()
+        res = partition(prob, method=name)
         dt = time.perf_counter() - t0
-        ev = metrics.evaluate_partition(mesh, part, k, with_diameter=True)
+        ev = res.evaluate(with_diameter=True)
         print(f"{name:12s} t={dt:6.2f}s cut={ev['cut']:7d} "
               f"maxCV={ev['maxCommVol']:6d} sumCV={ev['totalCommVol']:7d} "
               f"diam={ev['diameter_harmonic_mean']:6.1f} "
               f"imb={ev['imbalance']:.4f}")
+
+    # hierarchical k = k1 x k2 (e.g. 8 x 8 = 64 blocks): coarse Geographer
+    # + all k1 refinements in one batched vmap dispatch
+    k1, k2 = factor_k(k)
+    t0 = time.perf_counter()
+    res = partition(prob, hierarchy=(k1, k2))
+    dt = time.perf_counter() - t0
+    ev = res.evaluate(with_diameter=True)
+    lvl = res.stats["levels"]
+    print(f"{f'hier {k1}x{k2}':12s} t={dt:6.2f}s cut={ev['cut']:7d} "
+          f"maxCV={ev['maxCommVol']:6d} sumCV={ev['totalCommVol']:7d} "
+          f"diam={ev['diameter_harmonic_mean']:6.1f} "
+          f"imb={ev['imbalance']:.4f} "
+          f"(coarse imb={lvl[0]['imbalance']:.4f}, "
+          f"refine dispatches={lvl[1]['dispatches']})")
+    assert ev["imbalance"] <= prob.epsilon + 1e-6
+    assert len(np.unique(res.labels)) == k1 * k2
 
 
 def distributed(n: int, k: int, shards: int = 8):
@@ -44,15 +68,13 @@ def distributed(n: int, k: int, shards: int = 8):
     import os
     os.environ["XLA_FLAGS"] = \
         f"--xla_force_host_platform_device_count={shards}"
-    import jax
     import jax.numpy as jnp
     from repro.core import meshes
     from repro.core.balanced_kmeans import BKMConfig
     from repro.core.partitioner import make_distributed_partitioner
+    from repro.launch.mesh import make_compat_mesh
 
-    mesh_hw = jax.make_mesh(
-        (shards,), ("data",),
-        axis_types=(jax.sharding.AxisType.Auto,))
+    mesh_hw = make_compat_mesh((shards,), ("data",))
     m = meshes.REGISTRY["delaunay2d"](n, seed=0)
     cfg = BKMConfig(k=k, epsilon=0.03)
     run = make_distributed_partitioner(mesh_hw, cfg, "data")

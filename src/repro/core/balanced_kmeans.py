@@ -49,11 +49,17 @@ class BKMConfig:
     delta_tol: float = 5e-4        # movement threshold x bbox diagonal
     warmup: bool = True            # sampled warm-up rounds
     warmup_start: int = 100
-    use_kernel: bool = False       # Pallas assignment kernel
+    backend: str = "auto"          # kernels.ops assign backend (jnp/pallas)
+    use_kernel: bool = False       # deprecated: alias for backend="pallas"
     block_p: int = 1024            # kernel point-tile
     block_c: int = 128             # kernel center-tile
     assign_chunk: int = 65536      # jnp path: point chunk to bound n*k memory
     dtype: Any = jnp.float32
+
+    @property
+    def assign_backend(self) -> str:
+        """Effective backend name (folds the deprecated use_kernel flag)."""
+        return "pallas" if self.use_kernel else self.backend
 
 
 def _reduce(x, axis_name, op="sum"):
@@ -68,37 +74,18 @@ def _reduce(x, axis_name, op="sum"):
     raise ValueError(op)
 
 
-def assign_effective(points, centers, influence, chunk=65536, use_kernel=False,
+def assign_effective(points, centers, influence, chunk=65536, backend="auto",
                      block_p=1024, block_c=128):
     """Returns (assignment [n] int32, best_eff [n], second_eff [n]) where
-    best/second are *true* effective distances dist/influence."""
-    if use_kernel:
-        from repro.kernels.ops import assign_argmin
-        idx, best_sq, second_sq = assign_argmin(
-            points, centers, influence, block_p=block_p, block_c=block_c)
-        return idx, jnp.sqrt(best_sq), jnp.sqrt(second_sq)
-    inv2 = 1.0 / (influence * influence)
-    cn = jnp.sum(centers * centers, axis=1)
+    best/second are *true* effective distances dist/influence.
 
-    def one_chunk(p):
-        pn = jnp.sum(p * p, axis=1, keepdims=True)
-        sq = pn + cn[None, :] - 2.0 * p @ centers.T
-        eff = jnp.maximum(sq, 0.0) * inv2[None, :]
-        idx = jnp.argmin(eff, axis=1).astype(jnp.int32)
-        best = jnp.take_along_axis(eff, idx[:, None], axis=1)[:, 0]
-        masked = eff.at[jnp.arange(p.shape[0]), idx].set(jnp.inf)
-        second = jnp.min(masked, axis=1)
-        return idx, best, second
-
-    n = points.shape[0]
-    if n <= chunk:
-        idx, b, s = one_chunk(points)
-    else:
-        pad = (-n) % chunk
-        pts = jnp.pad(points, ((0, pad), (0, 0)))
-        pts = pts.reshape(-1, chunk, points.shape[1])
-        idx, b, s = jax.lax.map(one_chunk, pts)
-        idx, b, s = idx.reshape(-1)[:n], b.reshape(-1)[:n], s.reshape(-1)[:n]
+    ``backend`` selects the squared-distance argmin implementation from the
+    ``kernels.ops`` registry ("jnp", "pallas", or "auto")."""
+    from repro.kernels.ops import assign_backend
+    fn = assign_backend(backend)
+    idx, b, s = fn(points, centers, influence, chunk=chunk,
+                   block_p=block_p, block_c=block_c)
+    # second can be +inf when k == 1; keep bounds finite
     return idx, jnp.sqrt(b), jnp.sqrt(jnp.where(jnp.isfinite(s), s, b))
 
 
@@ -127,7 +114,7 @@ def assign_and_balance(points, w_eff, centers, influence, A_old, ub, lb, cfg,
     def body(carry):
         i, A, ub_c, lb_c, infl, _, _, skips = carry
         idx, best, second = assign_effective(
-            points, centers, infl, cfg.assign_chunk, cfg.use_kernel,
+            points, centers, infl, cfg.assign_chunk, cfg.assign_backend,
             cfg.block_p, cfg.block_c)
         skip = ub_c < lb_c                       # Hamerly test (sound bounds)
         A_new = jnp.where(skip, A, idx)
@@ -161,11 +148,15 @@ def assign_and_balance(points, w_eff, centers, influence, A_old, ub, lb, cfg,
 
 
 def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
-                    axis_name=None, n_global=None):
+                    axis_name=None, n_global=None, target_weight=None):
     """Algorithm 2 (minus the SFC sort, done by the caller/partitioner).
 
     ``points`` are the (local shard of) points, *already permuted randomly*
     if warm-up is enabled. ``centers0`` must be identical on all shards.
+    ``target_weight`` overrides the per-cluster balance target (default
+    total_weight / k); the hierarchical engine passes the *global* target
+    here so every refinement subproblem balances against the same bar and
+    the composed partition keeps global imbalance <= epsilon.
     Returns (assignment, centers, influence, stats).
     """
     n, d = points.shape
@@ -179,7 +170,9 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
         n_global = n * (1 if axis_name is None else
                         jax.lax.psum(1, axis_name))
 
-    total_w = _reduce(jnp.sum(w), axis_name)
+    total_w = jnp.maximum(_reduce(jnp.sum(w), axis_name), 1e-12)
+    base_target = (total_w / k if target_weight is None
+                   else jnp.asarray(target_weight, dtype))
     lo = _reduce(jnp.min(points, axis=0), axis_name, "min")
     hi = _reduce(jnp.max(points, axis=0), axis_name, "max")
     diag = jnp.sqrt(jnp.sum((hi - lo) ** 2))
@@ -202,7 +195,10 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
         (it, centers, infl, A, ub, lb, _, hist) = carry
         mask = sample_mask(it)
         w_eff = w * mask
-        target = jnp.maximum(_reduce(jnp.sum(w_eff), axis_name), 1e-12) / k
+        # scale the target by the sampled-weight fraction so warm-up rounds
+        # balance the sample against a proportionally reduced bar
+        w_round = jnp.maximum(_reduce(jnp.sum(w_eff), axis_name), 1e-12)
+        target = base_target * (w_round / total_w)
         A, infl, ub, lb, sizes, st = assign_and_balance(
             points, w_eff, centers, infl, A, ub, lb, cfg, target, axis_name)
         # --- movement phase (Alg. 2 lines 12-13): two global vector sums
@@ -247,7 +243,7 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
 
     # final full assignment + balance pass on ALL points (mask = 1) so the
     # returned assignment is exact and balanced even if warm-up dominated
-    target = total_w / k
+    target = base_target
     A, infl, ub, lb, sizes, st = assign_and_balance(
         points, w, centers, infl, A,
         jnp.full(n, jnp.inf, dtype), jnp.zeros(n, dtype), cfg, target, axis_name)

@@ -12,12 +12,18 @@
 
 All baselines respect node weights and produce near-perfect balance (they
 cut at weighted quantiles), mirroring the Zoltan implementations' behavior.
+
+These are the *implementations*; the preferred entry point is the unified
+engine (``repro.partition.partition(problem, method="rcb" | "rib" |
+"sfc" | "multijagged")``), which wraps them behind the common
+PartitionProblem/PartitionResult types. The ``BASELINES`` dict below is
+kept for existing callers.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .sfc import hilbert_index_np
+from .sfc import sfc_order
 
 
 def _weighted_quantile_split(vals: np.ndarray, w: np.ndarray, frac: float) -> float:
@@ -83,8 +89,7 @@ def sfc_partition(points: np.ndarray, k: int,
                   weights: np.ndarray | None = None) -> np.ndarray:
     """Hilbert-curve chunking (zoltanSFC / ParMetis-SFC analogue)."""
     n = points.shape[0]
-    keys = hilbert_index_np(points)
-    order = np.argsort(keys, kind="stable")
+    order = sfc_order(points)
     w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
     cw = np.cumsum(w[order])
     total = cw[-1]

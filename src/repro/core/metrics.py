@@ -12,6 +12,8 @@ All metrics operate on CSR numpy graphs (see meshes.Mesh).
 """
 from __future__ import annotations
 
+import types
+
 import numpy as np
 
 
@@ -126,19 +128,36 @@ def harmonic_mean(x: np.ndarray) -> float:
     return float(x.size / np.sum(1.0 / x))
 
 
+def evaluate_problem(problem, labels: np.ndarray,
+                     with_diameter: bool = False) -> dict:
+    """Metric set for a ``partition.PartitionProblem`` (duck-typed: needs
+    .k/.weights and optionally .indptr/.indices). Graph metrics are
+    included only when the problem carries a CSR adjacency — geometric
+    problems without a graph still get balance metrics."""
+    labels = np.asarray(labels)
+    out = {
+        "imbalance": imbalance(labels, problem.k, problem.weights),
+        "n_blocks_used": int(len(np.unique(labels))),
+    }
+    if getattr(problem, "indptr", None) is not None:
+        maxc, totc, _ = comm_volume(labels, problem.indptr, problem.indices,
+                                    problem.k)
+        out["cut"] = edge_cut(labels, problem.indptr, problem.indices)
+        out["maxCommVol"] = maxc
+        out["totalCommVol"] = totc
+        if with_diameter:
+            d = block_diameters(labels, problem.indptr, problem.indices,
+                                problem.k)
+            out["diameter_harmonic_mean"] = harmonic_mean(d[np.isfinite(d)])
+            out["n_disconnected"] = int(np.sum(~np.isfinite(d)))
+    return out
+
+
 def evaluate_partition(mesh, part: np.ndarray, k: int,
                        with_diameter: bool = False) -> dict:
-    part = np.asarray(part)
-    maxc, totc, _ = comm_volume(part, mesh.indptr, mesh.indices, k)
-    out = {
-        "cut": edge_cut(part, mesh.indptr, mesh.indices),
-        "maxCommVol": maxc,
-        "totalCommVol": totc,
-        "imbalance": imbalance(part, k, mesh.weights),
-        "n_blocks_used": int(len(np.unique(part))),
-    }
-    if with_diameter:
-        d = block_diameters(part, mesh.indptr, mesh.indices, k)
-        out["diameter_harmonic_mean"] = harmonic_mean(d[np.isfinite(d)])
-        out["n_disconnected"] = int(np.sum(~np.isfinite(d)))
-    return out
+    """Metric set for a ``meshes.Mesh`` + label array (legacy signature;
+    delegates to ``evaluate_problem`` — a Mesh duck-types everything but
+    ``k``)."""
+    shim = types.SimpleNamespace(k=k, weights=mesh.weights,
+                                 indptr=mesh.indptr, indices=mesh.indices)
+    return evaluate_problem(shim, part, with_diameter=with_diameter)

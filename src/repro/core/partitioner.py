@@ -29,7 +29,13 @@ def geographer_partition(points: np.ndarray, k: int,
                          cfg: BKMConfig | None = None,
                          seed: int = 0,
                          return_stats: bool = False):
-    """Partition ``points`` into k balanced blocks. Returns [n] block ids."""
+    """Partition ``points`` into k balanced blocks. Returns [n] block ids.
+
+    This remains the raw single-host implementation; prefer the unified
+    front door ``repro.partition.partition(problem, method="geographer")``,
+    which adds the registry, hierarchical (k1 x k2) mode, and quality
+    evaluation on top of it.
+    """
     cfg = cfg or BKMConfig(k=k)
     if cfg.k != k:
         cfg = replace(cfg, k=k)

@@ -142,6 +142,13 @@ def hilbert_index_jnp(points: jnp.ndarray, bits: int | None = None,
     return key
 
 
+def sfc_order(points: np.ndarray) -> np.ndarray:
+    """Stable Hilbert-curve sort order of ``points`` (host-side). Shared by
+    the SFC baseline partitioner, initial-center placement, and the
+    hierarchical engine's per-block center seeding."""
+    return np.argsort(hilbert_index_np(points), kind="stable")
+
+
 def sfc_initial_centers(points: np.ndarray, k: int,
                         weights: np.ndarray | None = None) -> np.ndarray:
     """Paper Alg. 2 line 7: centers at sorted positions i*n/k + n/2k.
@@ -149,8 +156,7 @@ def sfc_initial_centers(points: np.ndarray, k: int,
     With node weights, strides are taken in cumulative-weight space so each
     center seeds a block of roughly equal weight.
     """
-    keys = hilbert_index_np(points)
-    order = np.argsort(keys, kind="stable")
+    order = sfc_order(points)
     n = points.shape[0]
     if weights is None:
         idx = (np.arange(k) * n) // k + n // (2 * k)

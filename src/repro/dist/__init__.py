@@ -1,0 +1,3 @@
+from .rules import Rules, param_shardings, resolve_rules
+
+__all__ = ["Rules", "param_shardings", "resolve_rules"]

@@ -34,6 +34,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x ships TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _assign_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
                    idx_ref, best_ref, second_ref, *, block_c: int):
@@ -82,13 +85,25 @@ def _assign_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
         idx_ref[...] = new_idx
 
 
+def default_interpret() -> bool:
+    """Backend auto-detection: run the Mosaic-compiled kernel on real TPUs,
+    the Pallas interpreter everywhere else (CPU CI containers, GPU hosts)."""
+    return jax.default_backend() != "tpu"
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_p", "block_c", "interpret"))
 def assign_argmin_pallas(points, centers, inv2, tile_bounds,
                          block_p: int = 1024, block_c: int = 128,
-                         interpret: bool = True):
+                         interpret: bool | None = None):
     """points [N, D], centers [K, D] (pre-padded), inv2 [K] = 1/influence^2,
-    tile_bounds [N/BP, K/BC]. Returns (idx, best_eff_sq, second_eff_sq)."""
+    tile_bounds [N/BP, K/BC]. Returns (idx, best_eff_sq, second_eff_sq).
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpret elsewhere.
+    Pass an explicit bool to override (e.g. interpret-mode debugging on
+    TPU hosts)."""
+    if interpret is None:
+        interpret = default_interpret()
     n, d = points.shape
     k = centers.shape[0]
     assert n % block_p == 0 and k % block_c == 0
@@ -113,7 +128,7 @@ def assign_argmin_pallas(points, centers, inv2, tile_bounds,
             jax.ShapeDtypeStruct((n,), jnp.float32),
             jax.ShapeDtypeStruct((n,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(tile_bounds, points, centers, inv2[None, :])

@@ -23,6 +23,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x ships TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 FAR = 1e30
 
 
@@ -72,7 +75,7 @@ def router_topk_pallas(x, centroids, inv2, top_k: int, bt: int = 256,
             jax.ShapeDtypeStruct((T, top_k), jnp.int32),
             jax.ShapeDtypeStruct((T, top_k), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, centroids, inv2[None, :])

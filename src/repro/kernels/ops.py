@@ -1,9 +1,27 @@
-"""Jit'd wrappers around the Pallas kernels.
+"""Jit'd wrappers around the Pallas kernels + the assignment-backend
+registry.
 
-``assign_argmin`` handles padding, center sorting by bounding-box distance
-(paper Alg. 1 line 6) and tile-bound precomputation, then dispatches to the
-Pallas kernel. On this CPU container the kernel always runs in interpret
-mode; on real TPUs set ``REPRO_PALLAS_INTERPRET=0``.
+``assign_backend(name)`` is the single dispatch point for the balanced
+k-means hot loop (effective-distance argmin). Every backend has the same
+contract::
+
+    fn(points [n,d], centers [k,d], influence [k], *,
+       chunk, block_p, block_c) -> (idx [n] int32,
+                                    best_eff_sq [n], second_eff_sq [n])
+
+Registered backends:
+
+* ``jnp``    — chunked dense matmul (|p|^2 + |c|^2 - 2 p.c^T) with the
+               point axis tiled by ``chunk`` to bound the n*k scratch.
+* ``pallas`` — the fused TPU kernel (assign_kernel.py): tile-level
+               Hamerly/bbox pruning, centers pre-sorted by bbox distance.
+* ``auto``   — resolves to ``pallas`` on TPU hosts and ``jnp`` elsewhere.
+
+Third-party backends can be added with ``@register_assign_backend(name)``
+(e.g. a CUDA Triton port); ``BKMConfig.backend`` then selects them by
+name. Pallas kernels themselves auto-detect compiled-vs-interpret from the
+jax backend (assign_kernel.default_interpret); set
+``REPRO_PALLAS_INTERPRET=0/1`` to force either mode.
 """
 from __future__ import annotations
 
@@ -13,10 +31,80 @@ import os
 import jax
 import jax.numpy as jnp
 
-from .assign_kernel import assign_argmin_pallas
+from .assign_kernel import assign_argmin_pallas, default_interpret
 
-_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+_env = os.environ.get("REPRO_PALLAS_INTERPRET")
+_INTERPRET: bool | None = None if _env is None else _env != "0"
 _FAR = 1e30   # padded-center coordinate; effective distance ~1e60, never wins
+
+
+def _interpret_mode() -> bool:
+    return default_interpret() if _INTERPRET is None else _INTERPRET
+
+
+# ---------------------------------------------------------------------------
+# assignment-backend registry
+# ---------------------------------------------------------------------------
+
+_ASSIGN_BACKENDS: dict = {}
+
+
+def register_assign_backend(name: str):
+    """Decorator: register an effective-distance assignment backend."""
+    def deco(fn):
+        _ASSIGN_BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def available_assign_backends() -> list[str]:
+    return sorted(_ASSIGN_BACKENDS) + ["auto"]
+
+
+def resolve_assign_backend(name: str = "auto") -> str:
+    """Map ``auto`` to a concrete backend for the current jax platform.
+    Keyed off ``default_interpret()`` so the backend choice and the
+    kernel's compiled-vs-interpret decision share one predicate."""
+    if name == "auto":
+        return "jnp" if default_interpret() else "pallas"
+    if name not in _ASSIGN_BACKENDS:
+        raise KeyError(f"unknown assign backend {name!r}; "
+                       f"available: {available_assign_backends()}")
+    return name
+
+
+def assign_backend(name: str = "auto"):
+    """Return the assignment callable for ``name`` (resolving ``auto``)."""
+    return _ASSIGN_BACKENDS[resolve_assign_backend(name)]
+
+
+@register_assign_backend("jnp")
+def assign_argmin_jnp(points, centers, influence, *, chunk: int = 65536,
+                      block_p: int = 1024, block_c: int = 128):
+    """Chunked dense path (the paper's inner loop as one matmul per chunk).
+    ``block_p``/``block_c`` are accepted for contract parity and ignored."""
+    del block_p, block_c
+    inv2 = 1.0 / (influence * influence)
+    cn = jnp.sum(centers * centers, axis=1)
+
+    def one_chunk(p):
+        pn = jnp.sum(p * p, axis=1, keepdims=True)
+        sq = pn + cn[None, :] - 2.0 * p @ centers.T
+        eff = jnp.maximum(sq, 0.0) * inv2[None, :]
+        idx = jnp.argmin(eff, axis=1).astype(jnp.int32)
+        best = jnp.take_along_axis(eff, idx[:, None], axis=1)[:, 0]
+        masked = eff.at[jnp.arange(p.shape[0]), idx].set(jnp.inf)
+        second = jnp.min(masked, axis=1)
+        return idx, best, second
+
+    n = points.shape[0]
+    if n <= chunk:
+        return one_chunk(points)
+    pad = (-n) % chunk
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+    pts = pts.reshape(-1, chunk, points.shape[1])
+    idx, b, s = jax.lax.map(one_chunk, pts)
+    return idx.reshape(-1)[:n], b.reshape(-1)[:n], s.reshape(-1)[:n]
 
 
 def _tile_bounds(points, centers, inv2, block_p, block_c):
@@ -66,11 +154,22 @@ def assign_argmin(points, centers, influence, block_p: int = 1024,
     bounds = _tile_bounds(pts, cts, iv2, block_p, block_c)
     idx_s, best, second = assign_argmin_pallas(
         pts, cts, iv2, bounds, block_p=block_p, block_c=block_c,
-        interpret=_INTERPRET)
+        interpret=_interpret_mode())
     idx_s, best, second = idx_s[:n], best[:n], second[:n]
     # map sorted-center index back to the original center id
     idx = order[jnp.clip(idx_s, 0, k - 1)].astype(jnp.int32)
     return idx, best, second
+
+
+@register_assign_backend("pallas")
+def assign_argmin_pallas_backend(points, centers, influence, *,
+                                 chunk: int = 65536, block_p: int = 1024,
+                                 block_c: int = 128):
+    """Registry adapter for the Pallas kernel (``chunk`` is ignored: the
+    kernel's own point tiling bounds VMEM)."""
+    del chunk
+    return assign_argmin(points, centers, influence,
+                         block_p=block_p, block_c=block_c)
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "bk", "softcap"))
@@ -94,7 +193,7 @@ def flash_attention(q, k, v, bq: int = 512, bk: int = 512,
     kh = kt.transpose(0, 2, 1, 3).reshape(B * KV, Sp, dh)
     vh = vt.transpose(0, 2, 1, 3).reshape(B * KV, Sp, dh)
     o = flash_attention_pallas(qh, kh, vh, bq=bq, bk=bk, softcap=softcap,
-                               interpret=_INTERPRET)
+                               interpret=_interpret_mode())
     o = o.reshape(B, H, Sp, dh).transpose(0, 2, 1, 3)
     return o[:, :S]
 
@@ -114,5 +213,5 @@ def router_topk(x, centroids, influence, top_k: int, bt: int = 256):
                  constant_values=_FAR).astype(jnp.float32)
     ip = jnp.pad(inv2, (0, pad_e), constant_values=1.0).astype(jnp.float32)
     idx, eff = router_topk_pallas(xp, cp, ip, top_k=top_k, bt=bt,
-                                  interpret=_INTERPRET)
+                                  interpret=_interpret_mode())
     return idx[:T], eff[:T]

@@ -1,0 +1,21 @@
+"""Unified partitioning engine: one problem type, one ``partition()`` call,
+a pluggable algorithm registry, hierarchical (k1 x k2) recursion, and
+batched vmap execution. See DESIGN.md §Partition-engine.
+"""
+from . import algorithms  # noqa: F401  (populates the registry on import)
+from .batched import (batched_balanced_kmeans, build_refinement_batch,
+                      sequential_balanced_kmeans)
+from .engine import partition
+from .hierarchical import factor_k, hierarchical_partition
+from .problem import PartitionProblem, PartitionResult
+from .registry import (UnknownMethodError, available_methods,
+                       get_algorithm, register_algorithm, resolve_method)
+
+__all__ = [
+    "PartitionProblem", "PartitionResult", "partition",
+    "hierarchical_partition", "factor_k",
+    "batched_balanced_kmeans", "sequential_balanced_kmeans",
+    "build_refinement_batch",
+    "register_algorithm", "get_algorithm", "available_methods",
+    "resolve_method", "UnknownMethodError",
+]

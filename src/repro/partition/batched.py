@@ -1,0 +1,115 @@
+"""Batched balanced k-means: many independent subproblems, one dispatch.
+
+The paper's algorithm is a fixed-point loop over static-shape arrays, so a
+batch of B subproblems (the k1 refinement blocks of a hierarchical
+partition, or B independent meshes) vmaps cleanly: every subproblem is
+padded to a common ``cap`` point count and carries a validity mask encoded
+the same way as the warm-up sampling in ``core.balanced_kmeans`` — padded
+slots *replicate real points with weight zero*, so they influence neither
+the bounding box nor any weighted sum, and the nested while_loops batch
+via jax's select-based rule (finished subproblems coast).
+
+``batched_balanced_kmeans`` runs all B subproblems in ONE jitted device
+dispatch and is bit-for-bit identical to calling ``balanced_kmeans`` per
+subproblem (verified by tests/test_partition_engine.py);
+``sequential_balanced_kmeans`` is that reference loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.balanced_kmeans import BKMConfig, balanced_kmeans
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _batched_jit(points, weights, centers0, target_weight, cfg: BKMConfig):
+    def one(p, w, c0, tw):
+        return balanced_kmeans(p, cfg, w, c0, target_weight=tw)
+    return jax.vmap(one)(points, weights, centers0, target_weight)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _single_jit(points, weights, centers0, target_weight, cfg: BKMConfig):
+    return balanced_kmeans(points, cfg, weights, centers0,
+                           target_weight=target_weight)
+
+
+def _prep(points, weights, centers0, cfg, target_weight):
+    points = jnp.asarray(points, cfg.dtype)
+    B, n, _ = points.shape
+    weights = (jnp.ones((B, n), cfg.dtype) if weights is None
+               else jnp.asarray(weights, cfg.dtype))
+    centers0 = jnp.asarray(centers0, cfg.dtype)
+    if target_weight is None:
+        target_weight = jnp.sum(weights, axis=1) / cfg.k
+    else:
+        target_weight = jnp.broadcast_to(
+            jnp.asarray(target_weight, cfg.dtype), (B,))
+    return points, weights, centers0, target_weight
+
+
+def batched_balanced_kmeans(points, weights, centers0, cfg: BKMConfig,
+                            target_weight=None):
+    """Solve B balanced-k-means subproblems in one jitted vmap dispatch.
+
+    points [B, n, d]; weights [B, n] (0 marks padded slots — pad with
+    *copies of real points* so bounding boxes stay tight); centers0
+    [B, k, d]. ``target_weight``: scalar or [B] per-subproblem balance
+    target (default: each subproblem's total weight / k).
+
+    Returns (labels [B, n] int32, centers [B, k, d], influence [B, k],
+    stats pytree with leading batch axis).
+    """
+    args = _prep(points, weights, centers0, cfg, target_weight)
+    return _batched_jit(*args, cfg)
+
+
+def sequential_balanced_kmeans(points, weights, centers0, cfg: BKMConfig,
+                               target_weight=None):
+    """Reference loop: same subproblems, one dispatch each. Bit-for-bit
+    equal to ``batched_balanced_kmeans`` — kept for parity testing and for
+    hosts where one giant dispatch is undesirable."""
+    pts, w, c0, tw = _prep(points, weights, centers0, cfg, target_weight)
+    outs = [_single_jit(pts[b], w[b], c0[b], tw[b], cfg)
+            for b in range(pts.shape[0])]
+    A = jnp.stack([o[0] for o in outs])
+    C = jnp.stack([o[1] for o in outs])
+    infl = jnp.stack([o[2] for o in outs])
+    stats = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[3] for o in outs])
+    return A, C, infl, stats
+
+
+def build_refinement_batch(points: np.ndarray, weights: np.ndarray | None,
+                           labels: np.ndarray, k1: int):
+    """Gather the k1 coarse blocks into static-shape refinement inputs.
+
+    Every block is padded to ``cap = max block count`` by cycling its own
+    point indices (real coordinates, zero weight), which keeps per-block
+    bounding boxes exact and never introduces phantom geometry.
+
+    Returns (bpts [k1, cap, d], bw [k1, cap], gather [k1, cap] int64,
+    counts [k1]): ``gather[b, :counts[b]]`` are the original point ids of
+    block b (so sub-labels scatter back losslessly), the rest is padding.
+    """
+    n = points.shape[0]
+    labels = np.asarray(labels)
+    counts = np.bincount(labels, minlength=k1)
+    if counts.min() == 0:
+        raise ValueError("empty coarse block; cannot refine")
+    cap = int(counts.max())
+    order = np.argsort(labels, kind="stable")
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    gather = np.empty((k1, cap), np.int64)
+    for b in range(k1):
+        ids = order[starts[b]:starts[b + 1]]
+        reps = -(-cap // len(ids))          # ceil
+        gather[b] = np.tile(ids, reps)[:cap]
+    w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
+    valid = np.arange(cap)[None, :] < counts[:, None]
+    bpts = points[gather]                                 # [k1, cap, d]
+    bw = np.where(valid, w[gather], 0.0)                  # [k1, cap]
+    return bpts, bw, gather, counts

@@ -1,0 +1,59 @@
+"""``partition()`` — the single front door for all partitioning.
+
+    from repro.partition import PartitionProblem, partition
+
+    prob = PartitionProblem.from_mesh(mesh, k=64, epsilon=0.03)
+    res = partition(prob, method="geographer")          # flat
+    res = partition(prob, method="rcb")                 # any registry name
+    res = partition(prob, hierarchy=(8, 8))             # k = 8 x 8 blocks
+    res.labels, res.imbalance(), res.evaluate()
+
+``hierarchy`` accepts a (k1, k2) tuple or a "k1xk2" string; it routes
+through ``hierarchical_partition`` with ``method`` as the coarse cut and
+``refine_method`` (default geographer, batched vmap) as the per-block
+refinement.
+"""
+from __future__ import annotations
+
+from .hierarchical import hierarchical_partition
+from .problem import PartitionProblem, PartitionResult
+from .registry import get_algorithm, resolve_method
+
+
+def _parse_hierarchy(hierarchy) -> tuple[int, int]:
+    if isinstance(hierarchy, str):
+        parts = hierarchy.lower().split("x")
+        if len(parts) != 2:
+            raise ValueError(f"hierarchy string must be 'k1xk2', "
+                             f"got {hierarchy!r}")
+        return int(parts[0]), int(parts[1])
+    k1, k2 = hierarchy
+    return int(k1), int(k2)
+
+
+def partition(problem: PartitionProblem, method: str = "geographer", *,
+              hierarchy=None, evaluate: bool = False,
+              with_diameter: bool = False, **opts) -> PartitionResult:
+    """Partition ``problem`` with ``method`` (a registry name).
+
+    ``hierarchy=(k1, k2)`` (or "k1xk2") switches to two-level recursive
+    partitioning with k1*k2 == problem.k. ``evaluate=True`` fills
+    ``result.quality`` with the paper's metric set (requires the problem
+    to carry a CSR graph for the graph metrics). Remaining ``opts`` go to
+    the algorithm (e.g. BKMConfig fields for geographer, or
+    ``refine_method``/``batched`` in hierarchical mode).
+    """
+    if not isinstance(problem, PartitionProblem):
+        raise TypeError(
+            f"partition() takes a PartitionProblem, got {type(problem)}; "
+            "wrap raw arrays with PartitionProblem(points=..., k=...)")
+    resolve_method(method)                 # fail fast on unknown names
+    if hierarchy is not None:
+        k1, k2 = _parse_hierarchy(hierarchy)
+        result = hierarchical_partition(problem, k1, k2, method=method,
+                                        **opts)
+    else:
+        result = get_algorithm(method)(problem, **opts)
+    if evaluate:
+        result.evaluate(with_diameter=with_diameter)
+    return result

@@ -1,0 +1,158 @@
+"""Hierarchical (k = k1 x k2) recursive partitioning.
+
+Maps the partition onto a machine hierarchy (k1 nodes x k2 cores, racks x
+hosts, pods x chips): a *coarse* pass cuts the points into k1 blocks, then
+every block is refined into k2 sub-blocks. Block b owns the final label
+range [b*k2, (b+1)*k2), so sub-block ids are machine-hierarchy-aligned and
+neighbors in label space are neighbors in the hierarchy.
+
+Balance composition (why global imbalance <= epsilon still holds): the
+coarse pass runs with the tighter budget eps1 (default epsilon/2), so
+every block's weight W_b <= (1 + eps1) * W / k1 — the refinement then
+balances each block against the *global* target W / (k1*k2) (via the
+``target_weight`` hook in ``core.balanced_kmeans``) with the full epsilon.
+Feasibility needs W_b / k2 <= (1 + epsilon) * W / (k1*k2), i.e. eps1 <=
+epsilon, which the split guarantees with headroom; every sub-block then
+ends <= (1 + epsilon) * W / (k1*k2) directly, no product-of-epsilons
+slack.
+
+Refinement with ``refine_method="geographer"`` runs all k1 subproblems as
+ONE batched vmap dispatch (partition/batched.py); any other registered
+method refines block-by-block on the host (the quantile-cutting baselines
+are near-exactly balanced per block, so the coarse eps1 dominates).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.sfc import sfc_initial_centers
+
+from .batched import (batched_balanced_kmeans, build_refinement_batch,
+                      sequential_balanced_kmeans)
+from .problem import PartitionProblem, PartitionResult
+from .registry import get_algorithm, resolve_method
+
+_KMEANS_METHODS = {"geographer"}
+
+
+def factor_k(k: int) -> tuple[int, int]:
+    """Split k into (k1, k2) with k1 the largest divisor <= sqrt(k)."""
+    k1 = max(d for d in range(1, int(np.sqrt(k)) + 1) if k % d == 0)
+    return k1, k // k1
+
+
+def hierarchical_partition(problem: PartitionProblem,
+                           k1: int | None = None, k2: int | None = None, *,
+                           method: str = "geographer",
+                           refine_method: str = "geographer",
+                           batched: bool = True,
+                           coarse_epsilon: float | None = None,
+                           coarse_opts: dict | None = None,
+                           refine_opts: dict | None = None
+                           ) -> PartitionResult:
+    """Two-level partition of ``problem`` into k = k1*k2 blocks.
+
+    ``method`` cuts the k1 coarse blocks, ``refine_method`` cuts each into
+    k2 sub-blocks; both are registry names. ``batched=True`` runs all k1
+    k-means refinements in a single jitted dispatch.
+    """
+    if k1 is None or k2 is None:
+        k1, k2 = factor_k(problem.k)
+    if k1 * k2 != problem.k:
+        raise ValueError(f"k1*k2 = {k1}*{k2} != k = {problem.k}")
+    coarse_name = resolve_method(method)
+    refine_name = resolve_method(refine_method)
+    eps = problem.epsilon
+    # no refinement follows when k2 == 1, so the coarse pass gets the full
+    # budget instead of the tightened split
+    eps1 = (coarse_epsilon if coarse_epsilon is not None
+            else (eps if k2 == 1 else eps / 2.0))
+
+    # ---- level 1: coarse k1 blocks (tighter budget eps1)
+    coarse_problem = problem.replace(k=k1, epsilon=eps1)
+    coarse = get_algorithm(coarse_name)(coarse_problem,
+                                        **(coarse_opts or {}))
+    clabels = np.asarray(coarse.labels)
+    if k2 == 1:
+        result = PartitionResult(
+            labels=clabels, k=k1,
+            method=f"hierarchical({coarse_name}x{refine_name})",
+            problem=problem, centers=coarse.centers,
+            influence=coarse.influence)
+        result.stats = {
+            "k1": k1, "k2": 1,
+            "levels": [
+                {"method": coarse_name, "k": k1, "epsilon": eps1,
+                 "imbalance": coarse.imbalance()},
+                {"method": refine_name, "k": 1, "epsilon": eps,
+                 "batched": False, "dispatches": 0},
+            ],
+            "final_imbalance": result.imbalance(),
+        }
+        return result
+
+    # ---- level 2: refine every block against the GLOBAL target W/(k1*k2)
+    labels = np.empty(problem.n, np.int64)
+    refine_opts = dict(refine_opts or {})
+    if refine_name in _KMEANS_METHODS:
+        from .algorithms import make_bkm_config
+        refine_opts.setdefault("warmup", False)
+        cfg = make_bkm_config(problem, k=k2, **refine_opts)
+        bpts, bw, gather, counts = build_refinement_batch(
+            problem.points, problem.weights, clabels, k1)
+        if counts.min() < k2:
+            raise ValueError(
+                f"coarse block with {int(counts.min())} points cannot be "
+                f"refined into k2={k2} sub-blocks (n={problem.n} too small "
+                f"for k={k1 * k2})")
+        w_host = (np.ones(problem.n) if problem.weights is None
+                  else np.asarray(problem.weights, np.float64))
+        centers0 = np.stack([
+            sfc_initial_centers(bpts[b, :counts[b]], k2,
+                                w_host[gather[b, :counts[b]]])
+            for b in range(k1)])
+        runner = (batched_balanced_kmeans if batched
+                  else sequential_balanced_kmeans)
+        target = problem.total_weight / (k1 * k2)
+        sub, centers, infl, stats = runner(bpts, bw, centers0, cfg,
+                                           target_weight=target)
+        sub = np.asarray(sub)
+        for b in range(k1):
+            ids = gather[b, :counts[b]]
+            labels[ids] = b * k2 + sub[b, :counts[b]]
+        refine_stats = {
+            "imbalance_vs_global_target":
+                np.asarray(stats["final_imbalance"]).tolist(),
+            "iters": np.asarray(stats["iters"]).tolist(),
+            "batched": batched, "dispatches": 1 if batched else k1}
+        centers_out = np.asarray(centers).reshape(k1 * k2, -1)
+        infl_out = np.asarray(infl).reshape(k1 * k2)
+    else:
+        for b in range(k1):
+            ids = np.where(clabels == b)[0]
+            subp = PartitionProblem(
+                points=problem.points[ids], k=k2,
+                weights=None if problem.weights is None
+                else problem.weights[ids],
+                epsilon=eps, seed=problem.seed + b + 1,
+                name=f"{problem.name}/block{b}")
+            subres = get_algorithm(refine_name)(subp)
+            labels[ids] = b * k2 + np.asarray(subres.labels)
+        refine_stats = {"batched": False, "dispatches": k1}
+        centers_out = infl_out = None
+
+    result = PartitionResult(
+        labels=labels, k=k1 * k2,
+        method=f"hierarchical({coarse_name}x{refine_name})",
+        problem=problem, centers=centers_out, influence=infl_out)
+    result.stats = {
+        "k1": k1, "k2": k2,
+        "levels": [
+            {"method": coarse_name, "k": k1, "epsilon": eps1,
+             "imbalance": coarse.imbalance()},
+            {"method": refine_name, "k": k2, "epsilon": eps,
+             **refine_stats},
+        ],
+        "final_imbalance": result.imbalance(),
+    }
+    return result

@@ -1,0 +1,131 @@
+"""Problem/result dataclasses for the unified partitioning engine.
+
+``PartitionProblem`` is the single input type every algorithm in the
+registry consumes: a point cloud with optional node weights and an optional
+CSR graph (for quality metrics), plus the balance constraint (k, epsilon).
+``PartitionResult`` is the single output type: labels, optional centers /
+influence (center-based methods), per-level stats, and lazily computed
+quality metrics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PartitionProblem:
+    """One partitioning instance.
+
+    points  [n, d] float; d in {2, 3} for the SFC-based methods.
+    weights [n] nonneg float, or None (= unit weights).
+    indptr/indices: optional CSR adjacency (metrics only — the geometric
+    partitioners never read the graph, exactly like the paper).
+    """
+    points: np.ndarray
+    k: int
+    weights: np.ndarray | None = None
+    epsilon: float = 0.03
+    indptr: np.ndarray | None = None
+    indices: np.ndarray | None = None
+    seed: int = 0
+    name: str = "problem"
+
+    def __post_init__(self):
+        pts = np.asarray(self.points)
+        if pts.ndim != 2:
+            raise ValueError(f"points must be [n, d], got {pts.shape}")
+        if not (1 <= self.k <= pts.shape[0]):
+            raise ValueError(f"k={self.k} out of range for n={pts.shape[0]}")
+        if self.weights is not None and len(self.weights) != pts.shape[0]:
+            raise ValueError("weights length mismatch")
+        if (self.indptr is None) != (self.indices is None):
+            raise ValueError("indptr and indices must be given together")
+        # store the normalized arrays (frozen dataclass -> object.__setattr__)
+        object.__setattr__(self, "points", pts)
+        for name in ("weights", "indptr", "indices"):
+            v = getattr(self, name)
+            if v is not None:
+                object.__setattr__(self, name, np.asarray(v))
+
+    @property
+    def n(self) -> int:
+        return self.points.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.points.shape[1]
+
+    @property
+    def has_graph(self) -> bool:
+        return self.indptr is not None
+
+    @property
+    def total_weight(self) -> float:
+        if self.weights is None:
+            return float(self.n)
+        return float(np.sum(self.weights))
+
+    @property
+    def target_weight(self) -> float:
+        """Ideal per-block weight W/k (the denominator of the imbalance)."""
+        return self.total_weight / self.k
+
+    @classmethod
+    def from_mesh(cls, mesh, k: int, epsilon: float = 0.03,
+                  seed: int = 0) -> "PartitionProblem":
+        """Build a problem from a ``core.meshes.Mesh`` (points + CSR graph
+        + optional 2.5D node weights)."""
+        return cls(points=mesh.points, k=k, weights=mesh.weights,
+                   epsilon=epsilon, indptr=mesh.indptr, indices=mesh.indices,
+                   seed=seed, name=mesh.name)
+
+    def replace(self, **kw) -> "PartitionProblem":
+        import dataclasses
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass
+class PartitionResult:
+    """Output of ``partition()`` — always label-complete ([n] ids in
+    [0, k)), optionally with the center-based internals and quality."""
+    labels: np.ndarray
+    k: int
+    method: str
+    problem: PartitionProblem | None = None
+    centers: np.ndarray | None = None          # [k, d] (center-based only)
+    influence: np.ndarray | None = None        # [k]
+    stats: dict = field(default_factory=dict)  # per-level under "levels"
+    quality: dict | None = None
+
+    def imbalance(self) -> float:
+        """Measured global imbalance max_b W_b / (W/k) - 1."""
+        from repro.core import metrics
+        w = None if self.problem is None else self.problem.weights
+        return metrics.imbalance(np.asarray(self.labels), self.k, w)
+
+    def block_sizes(self) -> np.ndarray:
+        from repro.core import metrics
+        w = None if self.problem is None else self.problem.weights
+        return metrics.block_sizes(np.asarray(self.labels), self.k, w)
+
+    def evaluate(self, with_diameter: bool = False) -> dict:
+        """Compute (and cache) the paper's quality metric set. Graph
+        metrics require the problem to carry a CSR graph."""
+        from repro.core import metrics
+        if self.problem is None:
+            raise ValueError("result has no problem attached")
+        self.quality = metrics.evaluate_problem(
+            self.problem, np.asarray(self.labels),
+            with_diameter=with_diameter)
+        return self.quality
+
+    def summary(self) -> dict[str, Any]:
+        out = {"method": self.method, "k": self.k,
+               "imbalance": self.imbalance(),
+               "n_blocks_used": int(len(np.unique(self.labels)))}
+        if self.quality:
+            out.update(self.quality)
+        return out

@@ -1,0 +1,53 @@
+"""String-keyed algorithm registry — the pluggable half of the engine.
+
+An algorithm is any callable ``fn(problem: PartitionProblem, **opts) ->
+PartitionResult``. Register with::
+
+    @register_algorithm("mymethod", aliases=("mm",))
+    def _my_method(problem, **opts):
+        ...
+
+``get_algorithm`` resolves aliases and raises ``UnknownMethodError`` (a
+``KeyError``) with the available names for anything unregistered, so typos
+fail loudly at the front door instead of deep inside a jit trace.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+_REGISTRY: dict[str, Callable] = {}
+_ALIASES: dict[str, str] = {}
+
+
+class UnknownMethodError(KeyError):
+    pass
+
+
+def register_algorithm(name: str, aliases: tuple[str, ...] = ()):
+    """Decorator: register ``fn`` under ``name`` (+ aliases)."""
+    def deco(fn: Callable) -> Callable:
+        if name in _REGISTRY:
+            raise ValueError(f"algorithm {name!r} already registered")
+        _REGISTRY[name] = fn
+        for a in aliases:
+            _ALIASES[a] = name
+        return fn
+    return deco
+
+
+def resolve_method(name: str) -> str:
+    """Canonical name for ``name`` (resolving aliases)."""
+    name = _ALIASES.get(name, name)
+    if name not in _REGISTRY:
+        raise UnknownMethodError(
+            f"unknown partition method {name!r}; available: "
+            f"{available_methods()} (aliases: {sorted(_ALIASES)})")
+    return name
+
+
+def get_algorithm(name: str) -> Callable:
+    return _REGISTRY[resolve_method(name)]
+
+
+def available_methods() -> list[str]:
+    return sorted(_REGISTRY)

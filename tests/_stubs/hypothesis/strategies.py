@@ -1,0 +1,38 @@
+"""Deterministic stand-ins for the strategies the suite uses."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Strategy:
+    def example(self, i: int):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def example(self, i: int) -> int:
+        # edges first, then seeded interior draws
+        edges = [self.lo, self.hi, (self.lo + self.hi) // 2]
+        if i < len(edges):
+            return edges[i]
+        rng = np.random.default_rng(0xC0FFEE + i)
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def example(self, i: int):
+        return self.options[i % len(self.options)]
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Integers(min_value, max_value)
+
+
+def sampled_from(options) -> _Strategy:
+    return _SampledFrom(options)

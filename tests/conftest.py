@@ -1,3 +1,13 @@
+import os
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    # minimal container: fall back to the deterministic fixed-example stub
+    # (see requirements-dev.txt for the real thing)
+    sys.path.append(os.path.join(os.path.dirname(__file__), "_stubs"))
+
 import numpy as np
 import pytest
 

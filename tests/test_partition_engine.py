@@ -1,0 +1,241 @@
+"""Unified partitioning engine: registry, hierarchical (k1 x k2) recursion,
+batched-vs-sequential vmap parity."""
+import numpy as np
+import pytest
+
+from repro.core import meshes, metrics
+from repro.partition import (PartitionProblem, PartitionResult,
+                             UnknownMethodError, available_methods,
+                             batched_balanced_kmeans, build_refinement_batch,
+                             factor_k, partition,
+                             sequential_balanced_kmeans)
+from repro.partition.algorithms import make_bkm_config
+
+METHODS = ["geographer", "sfc", "rcb", "rib", "multijagged"]
+
+
+@pytest.fixture(scope="module")
+def problem():
+    mesh = meshes.REGISTRY["delaunay2d"](4000, seed=0)
+    return PartitionProblem.from_mesh(mesh, k=16, epsilon=0.03)
+
+
+@pytest.fixture(scope="module")
+def weighted_problem():
+    mesh = meshes.REGISTRY["climate25d"](4000, seed=0)
+    return PartitionProblem.from_mesh(mesh, k=16, epsilon=0.05)
+
+
+# ---------------------------------------------------------------------------
+# registry + front door
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS)
+def test_all_methods_through_front_door(problem, method):
+    res = partition(problem, method=method)
+    assert isinstance(res, PartitionResult)
+    assert res.labels.shape == (problem.n,)
+    assert set(np.unique(res.labels)) <= set(range(problem.k))
+    assert len(np.unique(res.labels)) == problem.k
+    # every registered method is balance-respecting on this mesh
+    assert res.imbalance() <= problem.epsilon + 1e-6
+
+
+def test_registry_rejects_unknown_method(problem):
+    with pytest.raises(UnknownMethodError, match="available"):
+        partition(problem, method="metis")
+    with pytest.raises(UnknownMethodError):
+        partition(problem, method="geographerr", hierarchy=(4, 4))
+
+
+def test_registry_aliases(problem):
+    assert set(METHODS) == set(available_methods())
+    a = partition(problem, method="hsfc")
+    b = partition(problem, method="sfc")
+    np.testing.assert_array_equal(a.labels, b.labels)
+
+
+def test_front_door_rejects_raw_arrays():
+    with pytest.raises(TypeError, match="PartitionProblem"):
+        partition(np.zeros((10, 2)), method="sfc")
+
+
+def test_geographer_opts_forwarded_and_validated(problem):
+    res = partition(problem, method="geographer", max_iter=5)
+    assert res.labels.shape == (problem.n,)
+    with pytest.raises(TypeError, match="unknown BKMConfig"):
+        partition(problem, method="geographer", max_itr=5)
+
+
+def test_evaluate_fills_quality(problem):
+    res = partition(problem, method="rcb", evaluate=True)
+    assert res.quality is not None
+    assert res.quality["cut"] > 0
+    assert res.quality["imbalance"] <= problem.epsilon + 1e-6
+    # graph-less problems still get balance metrics
+    p2 = PartitionProblem(points=problem.points, k=8)
+    q = metrics.evaluate_problem(p2, partition(p2, method="sfc").labels)
+    assert "imbalance" in q and "cut" not in q
+
+
+# ---------------------------------------------------------------------------
+# hierarchical k1 x k2
+# ---------------------------------------------------------------------------
+
+def _check_hierarchy(res, problem, k1, k2):
+    assert res.k == k1 * k2
+    assert res.stats["k1"] == k1 and res.stats["k2"] == k2
+    # global balance against W / (k1*k2)
+    assert res.imbalance() <= problem.epsilon + 1e-6
+    # label-range consistency: block b owns [b*k2, (b+1)*k2)
+    coarse = res.labels // k2
+    for b in range(k1):
+        sub = res.labels[coarse == b]
+        assert sub.size > 0
+        assert sub.min() >= b * k2 and sub.max() < (b + 1) * k2
+    assert len(res.stats["levels"]) == 2
+
+
+@pytest.mark.parametrize("k1,k2", [(4, 4), (2, 8)])
+def test_hierarchical_balance_and_label_ranges(problem, k1, k2):
+    res = partition(problem, hierarchy=(k1, k2))
+    _check_hierarchy(res, problem, k1, k2)
+    assert res.centers.shape == (k1 * k2, problem.dim)
+
+
+def test_hierarchical_weighted(weighted_problem):
+    res = partition(weighted_problem, hierarchy=(4, 4))
+    _check_hierarchy(res, weighted_problem, 4, 4)
+
+
+def test_hierarchical_string_spec_and_factoring(problem):
+    res = partition(problem, hierarchy="4x4")
+    _check_hierarchy(res, problem, 4, 4)
+    assert factor_k(16) == (4, 4)
+    assert factor_k(8) == (2, 4)
+    assert factor_k(7) == (1, 7)
+    with pytest.raises(ValueError, match="k1\\*k2"):
+        partition(problem, hierarchy=(3, 4))
+
+
+def test_hierarchical_k2_of_one(problem):
+    """k2 == 1 degenerates to the coarse pass but must keep the stats
+    contract (k1/k2 keys, two levels) and the full epsilon budget."""
+    res = partition(problem, hierarchy=(16, 1))
+    assert res.k == 16
+    assert res.stats["k1"] == 16 and res.stats["k2"] == 1
+    assert len(res.stats["levels"]) == 2
+    assert res.stats["levels"][0]["epsilon"] == problem.epsilon
+    assert res.stats["levels"][1]["dispatches"] == 0
+    assert res.imbalance() <= problem.epsilon + 1e-6
+
+
+def test_hierarchical_rejects_infeasible_blocks():
+    """A coarse block smaller than k2 must fail loudly, not silently
+    produce empty sub-blocks. One dominant node weight pins a weight-
+    balanced coarse block to a handful of points < k2."""
+    pts = np.random.default_rng(0).uniform(0, 1, (40, 2))
+    w = np.ones(40)
+    w[0] = 1000.0                      # one block ~= just this point
+    prob = PartitionProblem(points=pts, k=32, weights=w, epsilon=0.03)
+    with pytest.raises(ValueError, match="cannot be refined"):
+        partition(prob, hierarchy=(4, 8))
+
+
+def test_problem_normalizes_array_likes():
+    """Lists are accepted and stored as ndarrays (frozen-dataclass
+    normalization)."""
+    prob = PartitionProblem(points=[[0.0, 0.0], [1.0, 1.0], [2.0, 0.5],
+                                    [3.0, 1.5]], k=2, weights=[1, 1, 2, 2])
+    assert prob.n == 4 and prob.dim == 2
+    assert isinstance(prob.points, np.ndarray)
+    assert isinstance(prob.weights, np.ndarray)
+    res = partition(prob, method="sfc")
+    assert res.labels.shape == (4,)
+
+
+def test_hierarchical_baseline_refinement(problem):
+    """Non-k-means refinement (per-block host loop) keeps the invariants."""
+    res = partition(problem, hierarchy=(4, 4), refine_method="rcb")
+    _check_hierarchy(res, problem, 4, 4)
+    assert res.stats["levels"][1]["dispatches"] == 4
+
+
+# ---------------------------------------------------------------------------
+# batched vmap execution
+# ---------------------------------------------------------------------------
+
+def _small_problems(seed, n_list):
+    """3 small meshes padded to a common cap with weight-0 validity mask."""
+    rng = np.random.default_rng(seed)
+    cap = max(n_list)
+    k = 4
+    pts, ws, c0s = [], [], []
+    for i, n in enumerate(n_list):
+        p = rng.uniform(0, 1, (n, 2))
+        w = rng.uniform(0.5, 2.0, n)
+        # pad by replicating real points with zero weight
+        reps = -(-cap // n)
+        idx = np.tile(np.arange(n), reps)[:cap]
+        pts.append(p[idx])
+        ws.append(np.where(np.arange(cap) < n, w[idx], 0.0))
+        c0s.append(p[:: max(n // k, 1)][:k])
+    return (np.stack(pts), np.stack(ws), np.stack(c0s), k)
+
+
+def test_batched_matches_sequential_bitforbit():
+    """The single-dispatch vmap path must equal the per-problem loop
+    exactly (labels, centers, influence) on 3 different-sized meshes."""
+    pts, w, c0, k = _small_problems(0, [500, 341, 512])
+    cfg = make_bkm_config(
+        PartitionProblem(points=pts[0], k=k, epsilon=0.03), warmup=False)
+    A_b, C_b, I_b, S_b = batched_balanced_kmeans(pts, w, c0, cfg)
+    A_s, C_s, I_s, S_s = sequential_balanced_kmeans(pts, w, c0, cfg)
+    np.testing.assert_array_equal(np.asarray(A_b), np.asarray(A_s))
+    np.testing.assert_array_equal(np.asarray(C_b), np.asarray(C_s))
+    np.testing.assert_array_equal(np.asarray(I_b), np.asarray(I_s))
+    np.testing.assert_array_equal(np.asarray(S_b["final_imbalance"]),
+                                  np.asarray(S_s["final_imbalance"]))
+
+
+def test_batched_respects_validity_mask():
+    """Padded (weight-0) slots must not affect balance: per-problem
+    imbalance is measured over real points only."""
+    pts, w, c0, k = _small_problems(1, [400, 200, 300])
+    cfg = make_bkm_config(
+        PartitionProblem(points=pts[0], k=k, epsilon=0.03), warmup=False)
+    A, _, _, stats = batched_balanced_kmeans(pts, w, c0, cfg)
+    A = np.asarray(A)
+    for b, n in enumerate([400, 200, 300]):
+        sizes = np.bincount(A[b, :n], weights=w[b, :n], minlength=k)
+        target = w[b, :n].sum() / k
+        assert sizes.max() / target - 1.0 <= cfg.epsilon + 1e-5
+    assert np.all(np.asarray(stats["final_imbalance"]) <= cfg.epsilon + 1e-5)
+
+
+def test_build_refinement_batch_roundtrip(problem):
+    """Gather indices cover each block exactly; padding replicates real
+    block points with zero weight."""
+    coarse = partition(problem.replace(k=4), method="geographer")
+    bpts, bw, gather, counts = build_refinement_batch(
+        problem.points, problem.weights, coarse.labels, 4)
+    assert counts.sum() == problem.n
+    cap = gather.shape[1]
+    for b in range(4):
+        ids = gather[b, : counts[b]]
+        assert sorted(ids) == sorted(np.where(coarse.labels == b)[0])
+        # padded entries point at real members of the same block
+        assert set(gather[b, counts[b]:]) <= set(ids)
+        assert np.all(bw[b, counts[b]:] == 0.0)
+        np.testing.assert_array_equal(bpts[b], problem.points[gather[b]])
+    assert cap == counts.max()
+
+
+def test_batched_single_dispatch_stats(problem):
+    """Hierarchical refinement reports exactly one device dispatch when
+    batched (the acceptance criterion) and k1 when sequential."""
+    r1 = partition(problem, hierarchy=(4, 4), batched=True)
+    r2 = partition(problem, hierarchy=(4, 4), batched=False)
+    assert r1.stats["levels"][1]["dispatches"] == 1
+    assert r2.stats["levels"][1]["dispatches"] == 4
+    np.testing.assert_array_equal(r1.labels, r2.labels)
