@@ -6,6 +6,10 @@ import os
 import time
 
 RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+# machine-readable BENCH_*.json land here (repo root by default) — the CI
+# bench-gate job uploads them as artifacts and tools/bench_compare.py
+# diffs them against benchmarks/baselines/
+BENCH_JSON_DIR = os.environ.get("REPRO_BENCH_JSON_DIR", ".")
 
 
 def timer():
@@ -17,6 +21,16 @@ def save_json(name: str, obj) -> str:
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     with open(path, "w") as f:
         json.dump(obj, f, indent=1, default=float)
+    return path
+
+
+def save_bench_json(name: str, obj) -> str:
+    """Write the machine-readable ``BENCH_<name>.json`` regression file."""
+    os.makedirs(BENCH_JSON_DIR, exist_ok=True)
+    path = os.path.join(BENCH_JSON_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float, sort_keys=True)
+    print(f"[bench-json] wrote {path}")
     return path
 
 

@@ -18,7 +18,7 @@ from __future__ import annotations
 from repro.core import meshes as MESH
 from repro.partition import PartitionProblem, factor_k, partition
 
-from .common import geomean, md_table, save_json, timer
+from .common import geomean, md_table, save_bench_json, save_json, timer
 
 CLASSES = {
     "2d": ["tri", "refined2d", "rgg2d", "delaunay2d"],
@@ -42,7 +42,8 @@ def run_tool(tool: str, mesh, k: int, seed: int = 0):
     return ev
 
 
-def run(n: int = 20_000, k: int = 32, seeds=(0,), quick: bool = False):
+def run(n: int = 20_000, k: int = 32, seeds=(0,), quick: bool = False,
+        json_out: bool = False):
     if quick:
         n, k, seeds = 6_000, 16, (0,)
     tools = ["geographer", "hierarchical", "rcb", "rib", "hsfc", "mj"]
@@ -82,6 +83,8 @@ def run(n: int = 20_000, k: int = 32, seeds=(0,), quick: bool = False):
     out = {"rows": rows, "ratios_vs_geographer": ratios,
            "n": n, "k": k}
     save_json("quality", out)
+    if json_out:
+        save_bench_json("quality", out)
     cols = ["graph", "tool", "time_s", "cut", "maxCommVol", "totalCommVol",
             "diameter_harmonic_mean", "imbalance"]
     print("\n### Tables 1-2 analogue (per-mesh quality)\n")

@@ -30,14 +30,26 @@ import traceback
 ALL = ["quality", "scaling", "components", "moe_router", "roofline"]
 
 
+def _force_virtual_devices() -> None:
+    """Expose 8 virtual CPU devices so the SPMD scaling section runs on
+    single-CPU hosts. Must run before the first jax import — main() calls
+    this before importing any benchmark module."""
+    from repro.envflags import force_virtual_devices
+    force_virtual_devices(8)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes (CI-friendly)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL))
+    ap.add_argument("--json", action="store_true",
+                    help="also emit machine-readable BENCH_<name>.json "
+                         "regression files (quality, scaling)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else ALL
+    _force_virtual_devices()
 
     failures = []
     for name in names:
@@ -46,10 +58,10 @@ def main() -> None:
         try:
             if name == "quality":
                 from . import quality
-                quality.run(quick=args.quick)
+                quality.run(quick=args.quick, json_out=args.json)
             elif name == "scaling":
                 from . import scaling
-                scaling.run(quick=args.quick)
+                scaling.run(quick=args.quick, json_out=args.json)
             elif name == "components":
                 from . import components
                 components.run(quick=args.quick)

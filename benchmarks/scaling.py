@@ -4,19 +4,19 @@ unified ``repro.partition`` engine.
 No MPI cluster exists in this container, so the paper's weak/strong axes
 map to what is measurable here:
 
+* SPMD scaling — the headline section: the sharded shard_map partitioner
+  (``partition(problem, method=..., devices=d)``) over 1/2/4/8 virtual
+  host devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``,
+  set by benchmarks/run.py), flat geographer vs hierarchical k1 x k2 with
+  a distributed coarse pass. Communication structure is identical to the
+  paper's MPI version: psum'd global vector sums only. Per row we record
+  wall time (steady-state, compile separated out), edge cut, total comm
+  volume, imbalance and movement iterations — the regression-gate metric
+  set of ``BENCH_scaling.json``.
 * weak scaling — n grows with k at fixed n/k ("vertices per block"),
-  wall-time per partition call (Fig. 3a analogue; on one CPU the ideal
-  curve is linear in n rather than flat — we report time / n alongside);
-* strong scaling — fixed n, growing k (Fig. 3b analogue: the paper also
-  grows k with p), flat ``partition(method="geographer")`` vs
-  hierarchical ``partition(hierarchy=(k1, k2))`` — the hierarchical mode
-  replaces one k-center replicated k-means by a k1-center pass plus k1
-  batched k2-center subproblems in a single vmap dispatch, which is how
-  k scales past what one replicated-centers solve can hold;
-* SPMD scaling — the distributed shard_map partitioner over 2..8 forced
-  host devices (communication structure identical to the MPI version:
-  psum'd sizes/centers + all_to_all redistribution), reported as time and
-  as the number of collective ops in the compiled HLO.
+  wall-time per partition call (Fig. 3a analogue);
+* strong scaling — fixed n, growing k (Fig. 3b analogue), flat vs
+  hierarchical ``partition(hierarchy=(k1, k2))``.
 """
 from __future__ import annotations
 
@@ -25,7 +25,57 @@ import numpy as np
 from repro.core import meshes as MESH
 from repro.partition import PartitionProblem, factor_k, partition
 
-from .common import md_table, save_json, timer
+from .common import md_table, save_bench_json, save_json, timer
+
+SPMD_DEVICE_COUNTS = (1, 2, 4, 8)
+
+
+def _available_device_counts():
+    import jax
+    n = len(jax.devices())
+    return tuple(d for d in SPMD_DEVICE_COUNTS if d <= n)
+
+
+def _spmd_row(prob, method, d):
+    """Timed sharded run: first call (compile + run), second call
+    (steady state), then the paper metric set."""
+    kw = (dict(method="geographer", devices=d) if method == "flat"
+          else dict(hierarchy=factor_k(prob.k), devices=d))
+    t0 = timer()
+    partition(prob, **kw)
+    t_first = timer() - t0
+    t0 = timer()
+    res = partition(prob, **kw)
+    t_steady = timer() - t0
+    ev = res.evaluate()
+    # movement iterations: the flat path reports them at level 0, the
+    # hierarchical path per refinement block at level 1 — take the max
+    per_level = [lvl.get("iters") for lvl in res.stats["levels"]
+                 if lvl.get("iters") is not None]
+    iters = int(max(np.max(v) for v in per_level)) if per_level else None
+    row = {"method": method, "devices": d, "n": prob.n, "k": prob.k,
+           "time_s": t_steady, "compile_s": max(t_first - t_steady, 0.0),
+           "cut": ev["cut"], "totalCommVol": ev["totalCommVol"],
+           "imbalance": ev["imbalance"], "iters": iters,
+           "balanced": bool(ev["imbalance"] <= prob.epsilon + 1e-6)}
+    return row
+
+
+def spmd_scaling(n: int = 60_000, k: int = 64, quick: bool = False):
+    """Flat and hierarchical sharded runs over 1/2/4/8 virtual devices."""
+    if quick:
+        n, k = 8_000, 16
+    mesh = MESH.REGISTRY["delaunay2d"](n, seed=3)
+    prob = PartitionProblem.from_mesh(mesh, k, epsilon=0.03)
+    rows = []
+    for method in ("flat", "hierarchical"):
+        for d in _available_device_counts():
+            row = _spmd_row(prob, method, d)
+            rows.append(row)
+            print(f"  spmd {method:12s} devices={d} t={row['time_s']:.2f}s "
+                  f"(compile {row['compile_s']:.1f}s) cut={row['cut']} "
+                  f"imb={row['imbalance']:.3f}")
+    return rows
 
 
 def weak_scaling(per_block: int = 1500, ks=(4, 8, 16, 32, 64),
@@ -75,7 +125,12 @@ def strong_scaling(n: int = 60_000, ks=(4, 8, 16, 32, 64, 128),
     return rows
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, json_out: bool = False):
+    print("\n### SPMD scaling — sharded shard_map partitioner, "
+          "1/2/4/8 virtual devices (flat vs hierarchical)\n")
+    spmd = spmd_scaling(quick=quick)
+    print(md_table(spmd, ["method", "devices", "time_s", "compile_s",
+                          "cut", "totalCommVol", "imbalance", "iters"]))
     print("\n### Fig 3a analogue — weak scaling (n/k fixed)\n")
     weak = weak_scaling(quick=quick)
     print(md_table(weak, ["k", "n", "time_s", "us_per_point"]))
@@ -84,8 +139,10 @@ def run(quick: bool = False):
     strong = strong_scaling(quick=quick)
     print(md_table(strong, ["k", "hier", "time_flat_s", "time_hier_s",
                             "imb_flat", "imb_hier"]))
-    out = {"weak": weak, "strong": strong}
+    out = {"spmd": spmd, "weak": weak, "strong": strong, "quick": quick}
     save_json("scaling", out)
+    if json_out:
+        save_bench_json("scaling", out)
     return out
 
 

@@ -63,29 +63,25 @@ def single_host(n: int, k: int):
 
 
 def distributed(n: int, k: int, shards: int = 8):
-    """The paper's SPMD structure: points sharded, centers replicated,
+    """The paper's SPMD structure through the engine front door
+    (``devices=P``): points sharded round-robin, centers replicated,
     psum-only communication. Needs forced host devices -> fresh process."""
-    import os
-    os.environ["XLA_FLAGS"] = \
-        f"--xla_force_host_platform_device_count={shards}"
-    import jax.numpy as jnp
+    from repro.envflags import force_virtual_devices
+    force_virtual_devices(shards, override=True)
     from repro.core import meshes
-    from repro.core.balanced_kmeans import BKMConfig
-    from repro.core.partitioner import make_distributed_partitioner
-    from repro.launch.mesh import make_compat_mesh
+    from repro.partition import PartitionProblem, partition
 
-    mesh_hw = make_compat_mesh((shards,), ("data",))
     m = meshes.REGISTRY["delaunay2d"](n, seed=0)
-    cfg = BKMConfig(k=k, epsilon=0.03)
-    run = make_distributed_partitioner(mesh_hw, cfg, "data")
-    pts = jnp.asarray(m.points, jnp.float32)
-    w = jnp.ones(m.n, jnp.float32)
-    t0 = time.perf_counter()
-    A, rp, rv, centers, infl, imb, dropped = run(pts, w)
-    A.block_until_ready()
-    print(f"distributed ({shards} shards): t={time.perf_counter()-t0:.2f}s "
-          f"imbalance={float(imb):.4f} redistribution_dropped={int(dropped)}")
-    assert float(imb) <= 0.031
+    prob = PartitionProblem.from_mesh(m, k, epsilon=0.03)
+    ref = partition(prob, method="geographer")     # single-device reference
+    for d in (1, shards):
+        t0 = time.perf_counter()
+        res = partition(prob, method="geographer", devices=d)
+        dt = time.perf_counter() - t0
+        agree = float(np.mean(res.labels == ref.labels))
+        print(f"devices={d}: t={dt:.2f}s imbalance={res.imbalance():.4f} "
+              f"label agreement vs single-device={agree:.4f}")
+        assert res.imbalance() <= prob.epsilon + 1e-6
 
 
 if __name__ == "__main__":

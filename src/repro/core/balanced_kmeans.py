@@ -24,11 +24,15 @@ Faithful to Algorithms 1 + 2 with the following TPU/JAX adaptations
 The same code runs single-device or under ``shard_map`` (pass ``axis_name``)
 — cluster centers and influence are replicated, points are sharded, and the
 only communication is global vector sums (paper §4.1), exactly the psums
-emitted here.
+emitted here. The multi-device driver is ``repro.partition.distributed``
+(``partition(problem, method="geographer", devices=P)``), which pads each
+shard to a static per-device shape and plumbs ``axis_name`` through this
+module end-to-end; DESIGN.md §3b documents the layout.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass
 from typing import Any
 
@@ -55,6 +59,12 @@ class BKMConfig:
     block_c: int = 128             # kernel center-tile
     assign_chunk: int = 65536      # jnp path: point chunk to bound n*k memory
     dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.use_kernel:
+            warnings.warn(
+                "BKMConfig.use_kernel is deprecated; pass "
+                "backend='pallas' instead", DeprecationWarning, stacklevel=3)
 
     @property
     def assign_backend(self) -> str:
@@ -103,11 +113,14 @@ def erode_influence(influence, delta, beta):
 
 
 def assign_and_balance(points, w_eff, centers, influence, A_old, ub, lb, cfg,
-                       target_weight, axis_name=None):
+                       target_weight, axis_name=None, valid=None,
+                       n_valid=None):
     """Algorithm 1. Returns (A, influence, ub, lb, sizes, stats).
 
     ``w_eff`` already includes the warm-up sample mask. ``target_weight`` is
-    the global per-cluster target (psum'd by the caller).
+    the global per-cluster target (psum'd by the caller). ``valid`` marks
+    real (non-padded) points and ``n_valid`` their global count — only for
+    the skip statistic, so padding and shard count don't distort it.
     """
     d_eff = cfg.d_eff or points.shape[1]
 
@@ -117,6 +130,7 @@ def assign_and_balance(points, w_eff, centers, influence, A_old, ub, lb, cfg,
             points, centers, infl, cfg.assign_chunk, cfg.assign_backend,
             cfg.block_p, cfg.block_c)
         skip = ub_c < lb_c                       # Hamerly test (sound bounds)
+        skip_stat = skip if valid is None else (skip & valid)
         A_new = jnp.where(skip, A, idx)
         ub_n = jnp.where(skip, ub_c, best)
         lb_n = jnp.where(skip, lb_c, second)
@@ -132,7 +146,7 @@ def assign_and_balance(points, w_eff, centers, influence, A_old, ub, lb, cfg,
         ratio = infl / infl_new                  # = 1/factor
         ub_n = ub_n * jnp.where(done, 1.0, ratio[A_new])
         lb_n = lb_n * jnp.where(done, 1.0, jnp.min(ratio))
-        skips = skips + jnp.sum(skip.astype(jnp.float32))
+        skips = skips + jnp.sum(skip_stat.astype(jnp.float32))
         return i + 1, A_new, ub_n, lb_n, infl_new, sizes, done, skips
 
     def cond(carry):
@@ -142,8 +156,15 @@ def assign_and_balance(points, w_eff, centers, influence, A_old, ub, lb, cfg,
     init = (jnp.int32(0), A_old, ub, lb, influence,
             jnp.zeros(cfg.k, cfg.dtype), jnp.bool_(False), jnp.float32(0.0))
     i, A, ub, lb, infl, sizes, done, skips = jax.lax.while_loop(cond, body, init)
+    # under shard_map, report the *global* skip rate (psum'd numerator over
+    # the true global point count) so the statistic is invariant to both
+    # the shard count and the per-shard padding
+    skips = _reduce(skips, axis_name)
+    if n_valid is None:
+        n_valid = points.shape[0] * (1 if axis_name is None
+                                     else jax.lax.psum(1, axis_name))
     stats = {"balance_iters": i, "balanced": done,
-             "skip_fraction": skips / (jnp.maximum(i, 1) * points.shape[0])}
+             "skip_fraction": skips / (jnp.maximum(i, 1) * n_valid)}
     return A, infl, ub, lb, sizes, stats
 
 
@@ -169,6 +190,7 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
     if n_global is None:
         n_global = n * (1 if axis_name is None else
                         jax.lax.psum(1, axis_name))
+    valid = w > 0                # padded shard slots carry weight zero
 
     total_w = jnp.maximum(_reduce(jnp.sum(w), axis_name), 1e-12)
     base_target = (total_w / k if target_weight is None
@@ -200,7 +222,8 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
         w_round = jnp.maximum(_reduce(jnp.sum(w_eff), axis_name), 1e-12)
         target = base_target * (w_round / total_w)
         A, infl, ub, lb, sizes, st = assign_and_balance(
-            points, w_eff, centers, infl, A, ub, lb, cfg, target, axis_name)
+            points, w_eff, centers, infl, A, ub, lb, cfg, target, axis_name,
+            valid=valid, n_valid=n_global)
         # --- movement phase (Alg. 2 lines 12-13): two global vector sums
         wm = w_eff[:, None] * points
         csum = jax.ops.segment_sum(wm, A, num_segments=k)
@@ -246,7 +269,8 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
     target = base_target
     A, infl, ub, lb, sizes, st = assign_and_balance(
         points, w, centers, infl, A,
-        jnp.full(n, jnp.inf, dtype), jnp.zeros(n, dtype), cfg, target, axis_name)
+        jnp.full(n, jnp.inf, dtype), jnp.zeros(n, dtype), cfg, target,
+        axis_name, valid=valid, n_valid=n_global)
     stats = {"iters": it, "final_sizes": sizes,
              "final_imbalance": jnp.max(sizes) / target - 1.0,
              "final_balance_iters": st["balance_iters"],

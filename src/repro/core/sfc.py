@@ -19,6 +19,7 @@ vectorizes cleanly on both numpy and the TPU VPU.
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 
@@ -140,6 +141,61 @@ def hilbert_index_jnp(points: jnp.ndarray, bits: int | None = None,
         for i in range(d):
             key = (key << 1) | ((t[:, i] >> b) & 1)
     return key
+
+
+def sfc_initial_centers_sharded(points: jnp.ndarray, weights: jnp.ndarray,
+                                k: int, axis_name: str,
+                                n_buckets: int = 1024) -> jnp.ndarray:
+    """Distributed SFC bootstrap (paper Alg. 2 lines 4-7 under SPMD).
+
+    Runs inside ``shard_map`` with ``points``/``weights`` holding one
+    shard. Three steps, all O(1)-sized communication (independent of n):
+
+    1. per-shard Hilbert keys against the *global* bounding box
+       (pmin/pmax so every shard quantizes identically);
+    2. a psum'd weighted key histogram whose prefix sums locate the k
+       global weighted-quantile splitter keys — the static-shape analogue
+       of the paper's distributed prefix sum over the sorted curve;
+    3. for each splitter, the actual point with the globally nearest key
+       (pmin over per-shard minima, lowest shard id breaking ties, winner
+       coordinates broadcast with one psum).
+
+    Returns [k, d] centers, replicated across shards. Zero-weight padded
+    slots (which replicate real points) contribute nothing to the
+    histogram and only valid coordinates to step 3.
+    """
+    d = points.shape[1]
+    bits = 15 if d == 2 else 10
+    total_bits = bits * d
+    shift = max(total_bits - int(np.log2(n_buckets)), 0)
+    lo = jax.lax.pmin(jnp.min(points, axis=0), axis_name)
+    hi = jax.lax.pmax(jnp.max(points, axis=0), axis_name)
+    keys = hilbert_index_jnp(points, bits=bits, lo=lo, hi=hi)
+
+    bucket = (keys >> shift).astype(jnp.int32)
+    hist = jax.ops.segment_sum(weights, bucket, num_segments=n_buckets)
+    hist = jax.lax.psum(hist, axis_name)
+    cum = jnp.cumsum(hist)
+    total = jnp.maximum(cum[-1], 1e-12)
+    targets = (jnp.arange(k, dtype=cum.dtype) + 0.5) * (total / k)
+    b = jnp.clip(jnp.searchsorted(cum, targets), 0, n_buckets - 1)
+    prev = jnp.where(b > 0, cum[jnp.maximum(b - 1, 0)], 0.0)
+    frac = jnp.clip((targets - prev) / jnp.maximum(hist[b], 1e-12), 0.0, 1.0)
+    splitters = (b.astype(jnp.float32) + frac) * float(2 ** shift)  # [k]
+
+    # nearest real point to each splitter key (global argmin, ties -> the
+    # lowest shard id, then the shard-local argmin)
+    kd = jnp.abs(keys.astype(jnp.float32)[None, :] - splitters[:, None])
+    loc = jnp.argmin(kd, axis=1)                          # [k] local best
+    loc_d = jnp.take_along_axis(kd, loc[:, None], axis=1)[:, 0]
+    best_d = jax.lax.pmin(loc_d, axis_name)
+    me = jax.lax.axis_index(axis_name)
+    n_shards = jax.lax.psum(1, axis_name)
+    cand = jnp.where(loc_d <= best_d, me, n_shards)
+    winner = jax.lax.pmin(cand, axis_name)
+    mine = (winner == me)[:, None]
+    contrib = jnp.where(mine, points[loc], 0.0)
+    return jax.lax.psum(contrib, axis_name)
 
 
 def sfc_order(points: np.ndarray) -> np.ndarray:

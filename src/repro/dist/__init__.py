@@ -1,3 +1,5 @@
-from .rules import Rules, param_shardings, resolve_rules
+from .rules import (PARTITION_AXIS, Rules, param_shardings, partition_mesh,
+                    resolve_rules)
 
-__all__ = ["Rules", "param_shardings", "resolve_rules"]
+__all__ = ["PARTITION_AXIS", "Rules", "param_shardings", "partition_mesh",
+           "resolve_rules"]

@@ -26,12 +26,38 @@ import dataclasses
 from typing import Any, Mapping
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # mesh axis aliases
 _DATA = "data"
 _MODEL = "model"
 _POD = "pod"
+
+# axis name of the 1-D point-sharding mesh used by the distributed
+# geometric partitioner (repro.partition.distributed)
+PARTITION_AXIS = "shard"
+
+
+def partition_mesh(devices: int | None = None,
+                   axis_name: str = PARTITION_AXIS) -> Mesh:
+    """1-D device mesh for the sharded partitioner: points/weights live on
+    ``axis_name``, centers/influence are replicated.
+
+    ``devices=None`` spans every visible device; an int takes the first
+    ``devices`` of ``jax.devices()``. CPU hosts grow virtual devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before the
+    first jax import — tests/conftest.py and the CI workflow both do).
+    """
+    avail = jax.devices()
+    n = len(avail) if devices is None else int(devices)
+    if not 1 <= n <= len(avail):
+        raise ValueError(
+            f"devices={devices} out of range: {len(avail)} visible jax "
+            f"device(s); on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={devices} before the "
+            f"first jax import")
+    return Mesh(np.asarray(avail[:n]), (axis_name,))
 
 
 def _batch_axes(mesh: Mesh):

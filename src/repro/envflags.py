@@ -1,0 +1,28 @@
+"""Process-environment knobs that must be set before the first jax import.
+
+Deliberately imports nothing heavy (``repro`` is a namespace package, so
+``import repro.envflags`` pulls no jax): tests/conftest.py,
+benchmarks/run.py and the examples all call ``force_virtual_devices``
+first thing, before any module that imports jax.
+"""
+from __future__ import annotations
+
+import os
+
+_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_virtual_devices(n: int = 8, override: bool = False) -> None:
+    """Expose ``n`` virtual CPU devices via ``XLA_FLAGS``.
+
+    Appends to operator-set flags instead of clobbering them. An existing
+    device-count flag wins unless ``override=True`` (which replaces only
+    that flag and keeps the rest). Has no effect on processes that
+    already imported jax — call this before the first jax import.
+    """
+    cur = os.environ.get("XLA_FLAGS", "")
+    if _COUNT_FLAG in cur:
+        if not override:
+            return
+        cur = " ".join(p for p in cur.split() if not p.startswith(_COUNT_FLAG))
+    os.environ["XLA_FLAGS"] = f"{cur} {_COUNT_FLAG}={n}".strip()

@@ -61,12 +61,26 @@ def available_assign_backends() -> list[str]:
     return sorted(_ASSIGN_BACKENDS) + ["auto"]
 
 
-def resolve_assign_backend(name: str = "auto") -> str:
+def resolve_assign_backend(name: str = "auto", *, sharded: bool = False,
+                           n_local: int | None = None) -> str:
     """Map ``auto`` to a concrete backend for the current jax platform.
     Keyed off ``default_interpret()`` so the backend choice and the
-    kernel's compiled-vs-interpret decision share one predicate."""
+    kernel's compiled-vs-interpret decision share one predicate.
+
+    ``sharded=True`` marks resolution for a ``shard_map`` body (the
+    distributed partitioner): the choice is pinned *before* tracing —
+    ``jax.default_backend()`` is process-global, not trace-local — and
+    because the Pallas kernel's tile pruning only pays off once the local
+    shard spans at least one full point tile, shards smaller than
+    ``n_local < 1024`` (the default ``block_p``) resolve to the chunked
+    jnp path even on TPU hosts.
+    """
     if name == "auto":
-        return "jnp" if default_interpret() else "pallas"
+        if default_interpret():
+            return "jnp"
+        if sharded and n_local is not None and n_local < 1024:
+            return "jnp"
+        return "pallas"
     if name not in _ASSIGN_BACKENDS:
         raise KeyError(f"unknown assign backend {name!r}; "
                        f"available: {available_assign_backends()}")

@@ -1,21 +1,26 @@
 """Unified partitioning engine: one problem type, one ``partition()`` call,
-a pluggable algorithm registry, hierarchical (k1 x k2) recursion, and
-batched vmap execution. See DESIGN.md §Partition-engine.
+a pluggable algorithm registry, hierarchical (k1 x k2) recursion, batched
+vmap execution, and a sharded multi-device (shard_map) path via
+``partition(problem, devices=P)``. See DESIGN.md §Partition-engine / §3b.
 """
 from . import algorithms  # noqa: F401  (populates the registry on import)
 from .batched import (batched_balanced_kmeans, build_refinement_batch,
                       sequential_balanced_kmeans)
+from .distributed import ShardedPartitionProblem, partition_sharded
 from .engine import partition
 from .hierarchical import factor_k, hierarchical_partition
 from .problem import PartitionProblem, PartitionResult
 from .registry import (UnknownMethodError, available_methods,
-                       get_algorithm, register_algorithm, resolve_method)
+                       distributed_methods, get_algorithm,
+                       register_algorithm, resolve_method, supports_devices)
 
 __all__ = [
     "PartitionProblem", "PartitionResult", "partition",
     "hierarchical_partition", "factor_k",
     "batched_balanced_kmeans", "sequential_balanced_kmeans",
     "build_refinement_batch",
+    "ShardedPartitionProblem", "partition_sharded",
     "register_algorithm", "get_algorithm", "available_methods",
     "resolve_method", "UnknownMethodError",
+    "supports_devices", "distributed_methods",
 ]

@@ -43,8 +43,17 @@ def make_bkm_config(problem: PartitionProblem, k: int | None = None,
     return BKMConfig(**kw)
 
 
-@register_algorithm("geographer", aliases=("balanced_kmeans", "bkm"))
-def _geographer(problem: PartitionProblem, **opts) -> PartitionResult:
+@register_algorithm("geographer", aliases=("balanced_kmeans", "bkm"),
+                    supports_devices=True)
+def _geographer(problem: PartitionProblem, devices: int | None = None,
+                bootstrap: str | None = None, **opts) -> PartitionResult:
+    if devices is not None:
+        from .distributed import partition_sharded
+        return partition_sharded(problem, devices,
+                                 bootstrap=bootstrap or "host", **opts)
+    if bootstrap is not None:
+        raise TypeError("bootstrap= only applies to the multi-device path "
+                        "(pass devices=)")
     cfg = make_bkm_config(problem, **opts)
     labels, stats = geographer_partition(
         problem.points, problem.k, weights=problem.weights, cfg=cfg,

@@ -1,0 +1,201 @@
+"""Sharded multi-device balanced k-means — `partition(..., devices=P)`.
+
+The paper's scalability story (§4.1) is that every step of Algorithms 1+2
+communicates only *global vector sums* over per-process partials: cluster
+sizes [k], weighted coordinate sums [k, d], weighted counts [k], and the
+bounding box [d]. This module is the actual SPMD driver for that claim:
+
+* ``ShardedPartitionProblem`` — a static-shape sharded view of a
+  ``PartitionProblem``: points/weights split round-robin over P devices
+  and padded to a common per-device ``cap`` (padding replicates real
+  points at weight zero, so it perturbs no weighted sum and no bbox).
+* ``partition_sharded`` — lays the shards on a 1-D device mesh
+  (``dist.rules.partition_mesh``), replicates centers/influence, and runs
+  ``core.balanced_kmeans`` under ``shard_map`` with ``axis_name`` plumbed
+  end-to-end, so every ``_reduce`` in the core becomes a ``psum`` /
+  ``pmin`` / ``pmax`` — the paper's communication structure, nothing else.
+
+SFC bootstrap (paper Alg. 2 lines 4-7) comes in two flavours:
+
+* ``bootstrap="host"`` (default) — ``core.sfc.sfc_initial_centers`` on the
+  gathered points, byte-identical to the single-device path. This is what
+  makes the agreement guarantee below possible.
+* ``bootstrap="device"`` — fully in-graph distributed bootstrap
+  (``core.sfc.sfc_initial_centers_sharded``): per-shard Hilbert keys
+  against the psum'd global bbox + global weighted-prefix-sum splitting
+  over a psum'd key histogram. O(1)-sized communication, but 30-bit keys
+  (vs 62-bit host keys), so centers may differ from the host bootstrap.
+
+Agreement with the single-device path (tested in
+tests/test_sharded_partition.py, documented in DESIGN.md §3b):
+
+* ``devices=1`` is *bit-for-bit identical* to
+  ``partition(problem, method="geographer")``: the round-robin layout with
+  P=1 is the identity on the permuted order and every psum over a 1-device
+  axis is the identity.
+* ``devices=P>1`` with ``warmup=False`` differs only by float reduction
+  order (per-shard partial sums + psum vs one global ``segment_sum``):
+  >= 97% identical labels (100% in most measured configs), asserted by
+  the tests.
+* ``devices=P>1`` with warm-up (the default) additionally samples a
+  per-shard prefix that differs from the global prefix by up to P-1
+  points per round; on small problems that can steer k-means to a
+  *different but equally balanced* local optimum, so only the imbalance
+  bound and block coverage are guaranteed, not label agreement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.balanced_kmeans import BKMConfig, balanced_kmeans
+from repro.core.sfc import sfc_initial_centers, sfc_initial_centers_sharded
+from repro.dist.rules import PARTITION_AXIS, partition_mesh
+from repro.kernels.ops import resolve_assign_backend
+
+from .problem import PartitionProblem, PartitionResult
+
+BOOTSTRAPS = ("host", "device")
+
+
+@dataclass(frozen=True)
+class ShardedPartitionProblem:
+    """Static-shape sharded view of a ``PartitionProblem``.
+
+    Layout: the points are first permuted with the problem's seed (the
+    same permutation the single-device path uses for warm-up sampling),
+    then dealt *round-robin* — permuted position g lives at shard g % P,
+    slot g // P. A shard's slot prefix therefore tracks the global
+    permutation prefix to within P-1 points, which keeps the warm-up
+    sample semantics of ``core.balanced_kmeans`` (per-shard prefix masks)
+    aligned with the single-device run.
+
+    Slots past n (when P does not divide n) wrap around to real points at
+    weight zero: they influence neither weighted sums nor the (psum'd)
+    bounding box, and their labels are discarded on scatter-back.
+    """
+    problem: PartitionProblem
+    devices: int
+    points: np.ndarray      # [P, cap, d] float64
+    weights: np.ndarray     # [P, cap] float64, 0.0 marks padded slots
+    gather: np.ndarray      # [P, cap] int64 original point ids
+    valid: np.ndarray       # [P, cap] bool, False for padded slots
+
+    @property
+    def cap(self) -> int:
+        return self.points.shape[1]
+
+    @classmethod
+    def from_problem(cls, problem: PartitionProblem,
+                     devices: int) -> "ShardedPartitionProblem":
+        P = int(devices)
+        if P < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        n = problem.n
+        if P > n:
+            raise ValueError(f"devices={P} exceeds n={n} points")
+        rng = np.random.default_rng(problem.seed)
+        perm = rng.permutation(n)
+        cap = -(-n // P)                       # ceil(n / P)
+        g = np.arange(P * cap).reshape(cap, P).T     # [P, cap] global pos
+        valid = g < n
+        gather = perm[g % n]
+        pts = np.asarray(problem.points, np.float64)[gather]
+        w = (np.ones(n, np.float64) if problem.weights is None
+             else np.asarray(problem.weights, np.float64))
+        weights = np.where(valid, w[gather], 0.0)
+        return cls(problem=problem, devices=P, points=pts, weights=weights,
+                   gather=gather, valid=valid)
+
+    def scatter_labels(self, A: np.ndarray) -> np.ndarray:
+        """[P, cap] per-shard labels -> [n] labels in original point order
+        (padded slots dropped)."""
+        labels = np.empty(self.problem.n, np.int64)
+        labels[self.gather[self.valid]] = np.asarray(A)[self.valid]
+        return labels
+
+
+@functools.lru_cache(maxsize=64)
+def _build_runner(devices: int, cap: int, dim: int, cfg: BKMConfig,
+                  bootstrap: str, n_global: int):
+    """Compile-cached shard_map driver for one (mesh, shapes, cfg) combo."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = partition_mesh(devices)
+    axis = PARTITION_AXIS
+
+    def local_fn(points, weights, centers0):
+        points = points.reshape(cap, dim)
+        weights = weights.reshape(cap)
+        if bootstrap == "device":
+            centers0 = sfc_initial_centers_sharded(
+                points.astype(jnp.float32), weights.astype(jnp.float32),
+                cfg.k, axis)
+        A, centers, infl, stats = balanced_kmeans(
+            points, cfg, weights, centers0.astype(cfg.dtype),
+            axis_name=axis, n_global=n_global)
+        return A[None], centers, infl, stats
+
+    inner = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(axis), P(axis), P()),
+        out_specs=(P(axis), P(), P(), P()),
+        check_rep=False)
+    return jax.jit(inner)
+
+
+def geographer_partition_sharded(problem: PartitionProblem, devices: int,
+                                 cfg: BKMConfig | None = None,
+                                 bootstrap: str = "host"):
+    """Raw sharded run. Returns (labels [n] int64, centers, influence,
+    stats) — prefer ``partition(problem, devices=...)``."""
+    if bootstrap not in BOOTSTRAPS:
+        raise ValueError(f"bootstrap must be one of {BOOTSTRAPS}, "
+                         f"got {bootstrap!r}")
+    cfg = cfg or BKMConfig(k=problem.k, epsilon=problem.epsilon)
+    # pin "auto" to a concrete backend *before* tracing the shard_map body
+    sp = ShardedPartitionProblem.from_problem(problem, devices)
+    cfg = dataclasses.replace(
+        cfg, use_kernel=False,
+        backend=resolve_assign_backend(cfg.assign_backend, sharded=True,
+                                       n_local=sp.cap))
+    if bootstrap == "host":
+        centers0 = sfc_initial_centers(
+            np.asarray(problem.points, np.float64), cfg.k, problem.weights)
+    else:
+        centers0 = np.zeros((cfg.k, problem.dim))      # ignored in-graph
+    run = _build_runner(sp.devices, sp.cap, problem.dim, cfg, bootstrap,
+                        problem.n)
+    pts = jnp.asarray(sp.points, cfg.dtype)
+    w = jnp.asarray(sp.weights, cfg.dtype)
+    A, centers, infl, stats = run(pts, w, jnp.asarray(centers0, cfg.dtype))
+    labels = sp.scatter_labels(np.asarray(jax.device_get(A)))
+    return labels, centers, infl, jax.tree.map(np.asarray, stats)
+
+
+def partition_sharded(problem: PartitionProblem, devices: int, *,
+                      bootstrap: str = "host", **opts) -> PartitionResult:
+    """Multi-device geographer partition of ``problem`` over ``devices``
+    shards (the ``devices=`` path of the ``partition()`` front door).
+
+    ``opts`` are BKMConfig fields, exactly as in the single-device
+    adapter. ``bootstrap`` selects the SFC center seeding: "host"
+    (identical to single-device, the agreement default) or "device"
+    (fully in-graph distributed bootstrap).
+    """
+    from .algorithms import make_bkm_config
+    cfg = make_bkm_config(problem, **opts)
+    labels, centers, infl, stats = geographer_partition_sharded(
+        problem, devices, cfg=cfg, bootstrap=bootstrap)
+    return PartitionResult(
+        labels=labels, k=problem.k, method="geographer", problem=problem,
+        centers=np.asarray(centers), influence=np.asarray(infl),
+        stats={"levels": [dict(stats)],
+               "final_imbalance": float(stats["final_imbalance"]),
+               "devices": int(devices), "bootstrap": bootstrap})

@@ -6,18 +6,26 @@
     res = partition(prob, method="geographer")          # flat
     res = partition(prob, method="rcb")                 # any registry name
     res = partition(prob, hierarchy=(8, 8))             # k = 8 x 8 blocks
+    res = partition(prob, devices=8)                    # sharded SPMD run
     res.labels, res.imbalance(), res.evaluate()
 
 ``hierarchy`` accepts a (k1, k2) tuple or a "k1xk2" string; it routes
 through ``hierarchical_partition`` with ``method`` as the coarse cut and
 ``refine_method`` (default geographer, batched vmap) as the per-block
 refinement.
+
+``devices=P`` runs the method's multi-device shard_map path over P
+devices (points sharded, centers replicated, psum-only communication —
+see partition/distributed.py). Only methods registered with
+``supports_devices`` accept it; with ``hierarchy`` the coarse cut runs
+distributed and the refinement stays a host-side batched vmap.
 """
 from __future__ import annotations
 
 from .hierarchical import hierarchical_partition
 from .problem import PartitionProblem, PartitionResult
-from .registry import get_algorithm, resolve_method
+from .registry import (distributed_methods, get_algorithm, resolve_method,
+                       supports_devices)
 
 
 def _parse_hierarchy(hierarchy) -> tuple[int, int]:
@@ -32,27 +40,36 @@ def _parse_hierarchy(hierarchy) -> tuple[int, int]:
 
 
 def partition(problem: PartitionProblem, method: str = "geographer", *,
-              hierarchy=None, evaluate: bool = False,
+              hierarchy=None, devices: int | None = None,
+              evaluate: bool = False,
               with_diameter: bool = False, **opts) -> PartitionResult:
     """Partition ``problem`` with ``method`` (a registry name).
 
     ``hierarchy=(k1, k2)`` (or "k1xk2") switches to two-level recursive
-    partitioning with k1*k2 == problem.k. ``evaluate=True`` fills
-    ``result.quality`` with the paper's metric set (requires the problem
-    to carry a CSR graph for the graph metrics). Remaining ``opts`` go to
-    the algorithm (e.g. BKMConfig fields for geographer, or
-    ``refine_method``/``batched`` in hierarchical mode).
+    partitioning with k1*k2 == problem.k. ``devices=P`` runs the sharded
+    multi-device path over P devices (method must support it; with
+    ``hierarchy``, the coarse cut is the distributed pass).
+    ``evaluate=True`` fills ``result.quality`` with the paper's metric set
+    (requires the problem to carry a CSR graph for the graph metrics).
+    Remaining ``opts`` go to the algorithm (e.g. BKMConfig fields for
+    geographer, or ``refine_method``/``batched`` in hierarchical mode).
     """
     if not isinstance(problem, PartitionProblem):
         raise TypeError(
             f"partition() takes a PartitionProblem, got {type(problem)}; "
             "wrap raw arrays with PartitionProblem(points=..., k=...)")
     resolve_method(method)                 # fail fast on unknown names
+    if devices is not None and not supports_devices(method):
+        raise ValueError(
+            f"method {method!r} has no multi-device path; devices= is "
+            f"supported by: {distributed_methods()}")
     if hierarchy is not None:
         k1, k2 = _parse_hierarchy(hierarchy)
         result = hierarchical_partition(problem, k1, k2, method=method,
-                                        **opts)
+                                        devices=devices, **opts)
     else:
+        if devices is not None:
+            opts["devices"] = devices
         result = get_algorithm(method)(problem, **opts)
     if evaluate:
         result.evaluate(with_diameter=with_diameter)

@@ -30,7 +30,7 @@ from repro.core.sfc import sfc_initial_centers
 from .batched import (batched_balanced_kmeans, build_refinement_batch,
                       sequential_balanced_kmeans)
 from .problem import PartitionProblem, PartitionResult
-from .registry import get_algorithm, resolve_method
+from .registry import get_algorithm, resolve_method, supports_devices
 
 _KMEANS_METHODS = {"geographer"}
 
@@ -46,6 +46,7 @@ def hierarchical_partition(problem: PartitionProblem,
                            method: str = "geographer",
                            refine_method: str = "geographer",
                            batched: bool = True,
+                           devices: int | None = None,
                            coarse_epsilon: float | None = None,
                            coarse_opts: dict | None = None,
                            refine_opts: dict | None = None
@@ -54,7 +55,10 @@ def hierarchical_partition(problem: PartitionProblem,
 
     ``method`` cuts the k1 coarse blocks, ``refine_method`` cuts each into
     k2 sub-blocks; both are registry names. ``batched=True`` runs all k1
-    k-means refinements in a single jitted dispatch.
+    k-means refinements in a single jitted dispatch. ``devices=P`` runs
+    the *coarse* cut on the sharded multi-device path (the global pass is
+    where the data is big); the per-block refinement stays a host-side
+    batched vmap over blocks that are each 1/k1 of the data.
     """
     if k1 is None or k2 is None:
         k1, k2 = factor_k(problem.k)
@@ -62,6 +66,12 @@ def hierarchical_partition(problem: PartitionProblem,
         raise ValueError(f"k1*k2 = {k1}*{k2} != k = {problem.k}")
     coarse_name = resolve_method(method)
     refine_name = resolve_method(refine_method)
+    if devices is not None:
+        if not supports_devices(coarse_name):
+            raise ValueError(
+                f"coarse method {coarse_name!r} has no multi-device path; "
+                "devices= requires a supports_devices method")
+        coarse_opts = dict(coarse_opts or {}, devices=devices)
     eps = problem.epsilon
     # no refinement follows when k2 == 1, so the coarse pass gets the full
     # budget instead of the tightened split
@@ -83,7 +93,7 @@ def hierarchical_partition(problem: PartitionProblem,
             "k1": k1, "k2": 1,
             "levels": [
                 {"method": coarse_name, "k": k1, "epsilon": eps1,
-                 "imbalance": coarse.imbalance()},
+                 "devices": devices, "imbalance": coarse.imbalance()},
                 {"method": refine_name, "k": 1, "epsilon": eps,
                  "batched": False, "dispatches": 0},
             ],
@@ -149,7 +159,7 @@ def hierarchical_partition(problem: PartitionProblem,
         "k1": k1, "k2": k2,
         "levels": [
             {"method": coarse_name, "k": k1, "epsilon": eps1,
-             "imbalance": coarse.imbalance()},
+             "devices": devices, "imbalance": coarse.imbalance()},
             {"method": refine_name, "k": k2, "epsilon": eps,
              **refine_stats},
         ],

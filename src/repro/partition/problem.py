@@ -86,6 +86,13 @@ class PartitionProblem:
         import dataclasses
         return dataclasses.replace(self, **kw)
 
+    def to_sharded(self, devices: int):
+        """Static-shape sharded view for the multi-device engine: points
+        and weights dealt round-robin over ``devices`` shards and padded
+        to a common per-device cap (see partition/distributed.py)."""
+        from .distributed import ShardedPartitionProblem
+        return ShardedPartitionProblem.from_problem(self, devices)
+
 
 @dataclass
 class PartitionResult:

@@ -17,18 +17,27 @@ from typing import Callable
 
 _REGISTRY: dict[str, Callable] = {}
 _ALIASES: dict[str, str] = {}
+_SUPPORTS_DEVICES: set[str] = set()
 
 
 class UnknownMethodError(KeyError):
     pass
 
 
-def register_algorithm(name: str, aliases: tuple[str, ...] = ()):
-    """Decorator: register ``fn`` under ``name`` (+ aliases)."""
+def register_algorithm(name: str, aliases: tuple[str, ...] = (),
+                       supports_devices: bool = False):
+    """Decorator: register ``fn`` under ``name`` (+ aliases).
+
+    ``supports_devices=True`` declares that the algorithm understands the
+    ``devices=`` option (a multi-device shard_map path); the front door
+    rejects ``devices=`` for anything else before the algorithm runs.
+    """
     def deco(fn: Callable) -> Callable:
         if name in _REGISTRY:
             raise ValueError(f"algorithm {name!r} already registered")
         _REGISTRY[name] = fn
+        if supports_devices:
+            _SUPPORTS_DEVICES.add(name)
         for a in aliases:
             _ALIASES[a] = name
         return fn
@@ -47,6 +56,15 @@ def resolve_method(name: str) -> str:
 
 def get_algorithm(name: str) -> Callable:
     return _REGISTRY[resolve_method(name)]
+
+
+def supports_devices(name: str) -> bool:
+    """True when ``name`` (or its alias) has a multi-device path."""
+    return resolve_method(name) in _SUPPORTS_DEVICES
+
+
+def distributed_methods() -> list[str]:
+    return sorted(_SUPPORTS_DEVICES)
 
 
 def available_methods() -> list[str]:

@@ -1,6 +1,16 @@
 import os
 import sys
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+# Give CPU-only runners 8 virtual jax devices so the multi-device
+# (shard_map) tests run in-process. Must happen before the first jax
+# import — conftest.py loads before any test module, and nothing above
+# this line imports jax (repro.envflags is jax-free by design).
+from repro.envflags import force_virtual_devices  # noqa: E402
+
+force_virtual_devices(8)
+
 try:
     import hypothesis  # noqa: F401
 except ImportError:

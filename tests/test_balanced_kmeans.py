@@ -132,3 +132,16 @@ def test_voronoi_compactness_vs_sfc():
     pg = geographer_partition(pts, k)
     ps = sfc_partition(pts, k)
     assert mean_radius(pg) <= mean_radius(ps) * 1.05
+
+
+def test_use_kernel_deprecated_maps_to_pallas_backend():
+    """The legacy flag must warn and keep its meaning: backend='pallas'."""
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        cfg = BKMConfig(k=4, use_kernel=True)
+    assert cfg.assign_backend == "pallas"
+    # the replacement spelling is warning-free
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        cfg2 = BKMConfig(k=4, backend="pallas")
+    assert cfg2.assign_backend == "pallas"

@@ -1,0 +1,184 @@
+"""Benchmark-JSON regression gate (the CI ``bench-gate`` job).
+
+Usage::
+
+    python -m benchmarks.run --quick --only quality,scaling --json
+    python tools/bench_compare.py --baseline benchmarks/baselines \
+        --current . [--tolerance 0.10] [--gate-time]
+
+Diffs the machine-readable ``BENCH_*.json`` files against checked-in
+baselines and exits non-zero on a regression:
+
+* quality rows (matched by graph/tool): ``cut``, ``totalCommVol`` and
+  ``imbalance`` must not regress by more than ``--tolerance`` (default
+  10%; imbalance gets an extra absolute slack of 0.01 — it is an
+  epsilon-bounded quantity, not a ratio-scaled one).
+* scaling ``spmd`` rows (matched by method/devices): structural coverage
+  — every baseline (method, devices) row must exist, covering device
+  counts {1, 2, 4, 8} — plus ``imbalance``, ``iters`` (slack of 2
+  movement iterations) and the ``balanced`` flag.
+* wall-clock metrics are reported but only gated with ``--gate-time``
+  (shared CI runners are noisy); the time gate multiplier is
+  ``--time-tolerance`` (default 100%).
+
+A baseline row or file with no current counterpart is a coverage
+regression and fails the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+FAIL, WARN = "FAIL", "warn"
+
+
+def _load(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+class Report:
+    def __init__(self):
+        self.rows: list[tuple[str, str, str]] = []   # (severity, where, msg)
+
+    def add(self, severity: str, where: str, msg: str):
+        self.rows.append((severity, where, msg))
+
+    def gate(self, ok: bool, where: str, msg: str, hard: bool = True):
+        if not ok:
+            self.add(FAIL if hard else WARN, where, msg)
+
+    @property
+    def failures(self):
+        return [r for r in self.rows if r[0] == FAIL]
+
+
+def _regressed(cur, base, tol: float, abs_slack: float = 0.0) -> bool:
+    """Lower-is-better metric: True when cur exceeds the gated envelope."""
+    if base is None or cur is None:
+        return False
+    return cur > base * (1.0 + tol) + abs_slack
+
+
+def _fmt(cur, base) -> str:
+    return f"current={cur} baseline={base}"
+
+
+def compare_quality(base, cur, tol: float, rep: Report):
+    # commensurability first: quick-vs-full runs must never be compared —
+    # every metric would differ for config reasons, masking or inventing
+    # regressions
+    for fld in ("n", "k"):
+        rep.gate(base.get(fld) == cur.get(fld), f"quality.config.{fld}",
+                 "incommensurable runs (regenerate baselines with the "
+                 "same --quick setting): " + _fmt(cur.get(fld),
+                                                  base.get(fld)))
+    cur_rows = {(r["graph"], r["tool"]): r for r in cur.get("rows", [])}
+    for b in base.get("rows", []):
+        key = (b["graph"], b["tool"])
+        where = f"quality[{b['graph']}/{b['tool']}]"
+        c = cur_rows.get(key)
+        if c is None:
+            rep.add(FAIL, where, "row missing from current run")
+            continue
+        for met, slack in (("cut", 2.0), ("totalCommVol", 2.0),
+                           ("imbalance", 0.01)):
+            rep.gate(not _regressed(c.get(met), b.get(met), tol, slack),
+                     f"{where}.{met}", _fmt(c.get(met), b.get(met)))
+
+
+def compare_scaling(base, cur, tol: float, rep: Report,
+                    gate_time: bool, time_tol: float):
+    rep.gate(base.get("quick") == cur.get("quick"), "scaling.config.quick",
+             "incommensurable runs (regenerate baselines with the same "
+             "--quick setting): " + _fmt(cur.get("quick"),
+                                         base.get("quick")))
+    cur_rows = {(r["method"], r["devices"]): r for r in cur.get("spmd", [])}
+    seen_devices = {r["devices"] for r in cur.get("spmd", [])}
+    for d in (1, 2, 4, 8):
+        rep.gate(d in seen_devices, f"scaling.spmd.devices={d}",
+                 "no scaling row for this device count")
+    for b in base.get("spmd", []):
+        key = (b["method"], b["devices"])
+        where = f"scaling[{b['method']}/devices={b['devices']}]"
+        c = cur_rows.get(key)
+        if c is None:
+            rep.add(FAIL, where, "row missing from current run")
+            continue
+        rep.gate((c.get("n"), c.get("k")) == (b.get("n"), b.get("k")),
+                 f"{where}.config",
+                 f"incommensurable rows: current n={c.get('n')} "
+                 f"k={c.get('k')} baseline n={b.get('n')} k={b.get('k')}")
+        rep.gate(bool(c.get("balanced", False)), f"{where}.balanced",
+                 f"imbalance={c.get('imbalance')} exceeds epsilon")
+        rep.gate(not _regressed(c.get("imbalance"), b.get("imbalance"),
+                                tol, 0.01),
+                 f"{where}.imbalance",
+                 _fmt(c.get("imbalance"), b.get("imbalance")))
+        rep.gate(not _regressed(c.get("iters"), b.get("iters"), tol, 2.0),
+                 f"{where}.iters", _fmt(c.get("iters"), b.get("iters")))
+        rep.gate(not _regressed(c.get("time_s"), b.get("time_s"), time_tol),
+                 f"{where}.time_s", _fmt(c.get("time_s"), b.get("time_s")),
+                 hard=gate_time)
+
+
+COMPARATORS = {
+    "BENCH_quality.json":
+        lambda b, c, a, r: compare_quality(b, c, a.tolerance, r),
+    "BENCH_scaling.json":
+        lambda b, c, a, r: compare_scaling(b, c, a.tolerance, r,
+                                           a.gate_time, a.time_tolerance),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on >tolerance regression vs checked-in baselines")
+    ap.add_argument("--baseline", default="benchmarks/baselines",
+                    help="directory holding baseline BENCH_*.json")
+    ap.add_argument("--current", default=".",
+                    help="directory holding freshly produced BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed relative regression (default 0.10)")
+    ap.add_argument("--gate-time", action="store_true",
+                    help="treat wall-clock regressions as failures")
+    ap.add_argument("--time-tolerance", type=float, default=1.0,
+                    help="allowed relative wall-clock regression "
+                         "(default 1.0 = 2x)")
+    args = ap.parse_args(argv)
+
+    baselines = sorted(glob.glob(os.path.join(args.baseline, "BENCH_*.json")))
+    if not baselines:
+        print(f"error: no BENCH_*.json baselines under {args.baseline!r}",
+              file=sys.stderr)
+        return 2
+
+    rep = Report()
+    for bpath in baselines:
+        name = os.path.basename(bpath)
+        cpath = os.path.join(args.current, name)
+        if not os.path.exists(cpath):
+            rep.add(FAIL, name, f"current file {cpath} missing "
+                                "(run benchmarks with --json)")
+            continue
+        comparator = COMPARATORS.get(name)
+        if comparator is None:
+            print(f"[bench-compare] {name}: no comparator, "
+                  "checked existence only")
+            continue
+        comparator(_load(bpath), _load(cpath), args, rep)
+
+    for severity, where, msg in rep.rows:
+        print(f"[{severity}] {where}: {msg}")
+    n_fail, n_warn = len(rep.failures), len(rep.rows) - len(rep.failures)
+    print(f"[bench-compare] {len(baselines)} baseline file(s), "
+          f"{n_fail} failure(s), {n_warn} warning(s), "
+          f"tolerance={args.tolerance:.0%}")
+    return 1 if rep.failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
