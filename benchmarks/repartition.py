@@ -1,0 +1,86 @@
+"""Dynamic repartitioning benchmark: warm-started Geographer vs cold
+restart on the drifting-hotspot workload (DESIGN.md §8).
+
+A simulation whose load drifts every step must repartition cheaply while
+migrating little data. This benchmark drives
+``core.timeseries.simulate_loadbalance`` twice over the same
+drifting-Gaussian-hotspot weight field — once warm-started from each
+previous step's (centers, influence), once cold-restarted (fresh SFC
+bootstrap + relabel matching, the fair baseline) — and reports, per step:
+movement iterations, migration volume/fraction, imbalance, wall time.
+
+The headline claims gated by ``tools/bench_compare.py`` against
+``benchmarks/baselines/BENCH_repartition.json``:
+
+* warm needs >= 3x fewer balanced-k-means movement iterations, and
+* warm migrates <= 30% of the weight a cold restart moves,
+* while staying balanced (imbalance <= epsilon) at every step.
+"""
+from __future__ import annotations
+
+from repro.core import meshes as MESH
+from repro.partition import PartitionProblem
+
+from .common import md_table, save_bench_json, save_json
+
+STEPS = {"quick": 8, "full": 12}
+
+
+def _strip(sim: dict) -> dict:
+    """JSON-serializable view of a simulate_loadbalance() output."""
+    out = {k: v for k, v in sim.items() if k != "final_result"}
+    return out
+
+
+def run(quick: bool = False, json_out: bool = False):
+    n, k = (8_000, 16) if quick else (30_000, 16)
+    steps = STEPS["quick" if quick else "full"]
+    from repro.core.timeseries import simulate_loadbalance
+
+    mesh = MESH.REGISTRY["delaunay2d"](n, seed=5)
+    prob = PartitionProblem.from_mesh(mesh, k, epsilon=0.03, seed=5)
+    workload = MESH.WORKLOADS["drifting_hotspot"]()
+
+    print(f"\n### Dynamic repartitioning — {type(workload).__name__}, "
+          f"n={prob.n} k={k} T={steps} (warm restart vs cold restart)\n")
+    runs = {}
+    for mode in ("warm", "cold"):
+        sim = simulate_loadbalance(prob, workload, steps, mode=mode)
+        runs[mode] = _strip(sim)
+        print(f"-- {mode}")
+        print(md_table(sim["per_step"],
+                       ["step", "iters", "migration_fraction",
+                        "retained_fraction", "imbalance", "time_s"]))
+        print()
+
+    sw, sc = runs["warm"]["summary"], runs["cold"]["summary"]
+    summary = {
+        "iters_ratio": sc["mean_iters"] / max(sw["mean_iters"], 1e-9),
+        "migration_ratio": (sw["mean_migration_fraction"]
+                            / max(sc["mean_migration_fraction"], 1e-9)),
+        "warm_mean_iters": sw["mean_iters"],
+        "cold_mean_iters": sc["mean_iters"],
+        "warm_mean_migration_fraction": sw["mean_migration_fraction"],
+        "cold_mean_migration_fraction": sc["mean_migration_fraction"],
+        "warm_all_balanced": sw["all_balanced"],
+        "cold_all_balanced": sc["all_balanced"],
+    }
+    print(f"warm/cold mean iters: {sw['mean_iters']:.2f} / "
+          f"{sc['mean_iters']:.2f}  (cold/warm = "
+          f"{summary['iters_ratio']:.1f}x, claim >= 3x)")
+    print(f"warm/cold mean migration fraction: "
+          f"{sw['mean_migration_fraction']:.4f} / "
+          f"{sc['mean_migration_fraction']:.4f}  (warm/cold = "
+          f"{summary['migration_ratio']:.3f}, claim <= 0.30)")
+
+    out = {"workload": "drifting_hotspot", "n": prob.n, "k": k,
+           "steps": steps, "epsilon": prob.epsilon, "quick": quick,
+           "warm": runs["warm"], "cold": runs["cold"], "summary": summary}
+    save_json("repartition", out)
+    if json_out:
+        save_bench_json("repartition", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

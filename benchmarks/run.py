@@ -14,12 +14,15 @@ hierarchical (coarse Geographer + batched vmap refinement) mode appears
 as its own row/column where applicable.
 
 Modules:
-  quality    — Tables 1-2 + Fig 2 (partition quality vs RCB/RIB/HSFC/MJ
-               + hierarchical k1xk2)
-  scaling    — Fig 3a/3b (weak/strong scaling; flat vs hierarchical)
-  components — §5.3.2 component shares + §4.3 bound-skip-rate claim
-  moe_router — paper Eq. (1) as MoE load balancing (framework integration)
-  roofline   — §Roofline/§Dry-run aggregation from results/dryrun/*.json
+  quality     — Tables 1-2 + Fig 2 (partition quality vs RCB/RIB/HSFC/MJ
+                + hierarchical k1xk2)
+  scaling     — Fig 3a/3b (weak/strong scaling; flat vs hierarchical)
+  repartition — dynamic repartitioning: warm-started Geographer vs cold
+                restart on a drifting-hotspot workload (iterations,
+                migration volume, per-step balance)
+  components  — §5.3.2 component shares + §4.3 bound-skip-rate claim
+  moe_router  — paper Eq. (1) as MoE load balancing (framework integration)
+  roofline    — §Roofline/§Dry-run aggregation from results/dryrun/*.json
 """
 from __future__ import annotations
 
@@ -27,7 +30,8 @@ import argparse
 import time
 import traceback
 
-ALL = ["quality", "scaling", "components", "moe_router", "roofline"]
+ALL = ["quality", "scaling", "repartition", "components", "moe_router",
+       "roofline"]
 
 
 def _force_virtual_devices() -> None:
@@ -46,7 +50,8 @@ def main() -> None:
                     help="comma-separated subset of: " + ",".join(ALL))
     ap.add_argument("--json", action="store_true",
                     help="also emit machine-readable BENCH_<name>.json "
-                         "regression files (quality, scaling)")
+                         "regression files (quality, scaling, "
+                         "repartition)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else ALL
     _force_virtual_devices()
@@ -62,6 +67,9 @@ def main() -> None:
             elif name == "scaling":
                 from . import scaling
                 scaling.run(quick=args.quick, json_out=args.json)
+            elif name == "repartition":
+                from . import repartition
+                repartition.run(quick=args.quick, json_out=args.json)
             elif name == "components":
                 from . import components
                 components.run(quick=args.quick)

@@ -1,9 +1,12 @@
 """Full partitioning scenario through the unified engine: weighted 2.5D
 climate-style mesh (the paper's motivating application), every registered
-method, hierarchical k = 8 x 8 recursion, and an optional SPMD
-distributed run.
+method, hierarchical k = 8 x 8 recursion, an optional SPMD distributed
+run, and a dynamic-repartitioning time loop (drifting workload, warm vs
+cold restart).
 
     PYTHONPATH=src python examples/partition_mesh.py [--n 30000] [--k 64]
+    PYTHONPATH=src python examples/partition_mesh.py --quick
+    PYTHONPATH=src python examples/partition_mesh.py --repartition
     PYTHONPATH=src python examples/partition_mesh.py --distributed
         (forces 8 host devices; run in a fresh process)
 
@@ -84,13 +87,47 @@ def distributed(n: int, k: int, shards: int = 8):
         assert res.imbalance() <= prob.epsilon + 1e-6
 
 
+def dynamic(n: int, k: int, steps: int = 6):
+    """Time loop: a drifting-hotspot load over a fixed mesh, repartitioned
+    every step — warm-started Geographer vs a cold restart, reporting the
+    migration each would cost (the dynamic repartitioning story,
+    DESIGN.md §8)."""
+    from repro.core import meshes
+    from repro.core.timeseries import simulate_loadbalance
+    from repro.partition import PartitionProblem
+
+    mesh = meshes.REGISTRY["delaunay2d"](n, seed=0)
+    prob = PartitionProblem.from_mesh(mesh, k, epsilon=0.03)
+    workload = meshes.WORKLOADS["drifting_hotspot"]()
+    print(f"mesh: {mesh.name} n={mesh.n} k={k} "
+          f"workload={type(workload).__name__} T={steps}")
+    for mode in ("warm", "cold"):
+        sim = simulate_loadbalance(prob, workload, steps, mode=mode)
+        s = sim["summary"]
+        print(f"{mode:5s}: mean iters={s['mean_iters']:.2f} "
+              f"mean migration={s['mean_migration_fraction']:.4f} "
+              f"max imbalance={s['max_imbalance']:.4f} "
+              f"(all balanced: {s['all_balanced']})")
+        assert s["all_balanced"]
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=30_000)
     ap.add_argument("--k", type=int, default=64)
     ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--repartition", action="store_true",
+                    help="dynamic repartitioning time loop")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run of every section")
     args = ap.parse_args()
+    if args.quick:
+        args.n, args.k = min(args.n, 4_000), min(args.k, 16)
     if args.distributed:
         distributed(min(args.n, 20_000), min(args.k, 16))
+    elif args.repartition:
+        dynamic(args.n, min(args.k, 16), steps=4 if args.quick else 6)
     else:
         single_host(args.n, args.k)
+        dynamic(min(args.n, 8_000), min(args.k, 16),
+                steps=3 if args.quick else 6)

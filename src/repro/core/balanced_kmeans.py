@@ -169,7 +169,9 @@ def assign_and_balance(points, w_eff, centers, influence, A_old, ub, lb, cfg,
 
 
 def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
-                    axis_name=None, n_global=None, target_weight=None):
+                    axis_name=None, n_global=None, target_weight=None,
+                    influence0=None, warm_start=False,
+                    prev_assignment=None):
     """Algorithm 2 (minus the SFC sort, done by the caller/partitioner).
 
     ``points`` are the (local shard of) points, *already permuted randomly*
@@ -178,6 +180,29 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
     total_weight / k); the hierarchical engine passes the *global* target
     here so every refinement subproblem balances against the same bar and
     the composed partition keeps global imbalance <= epsilon.
+
+    ``warm_start=True`` resumes from a previous run's ``(centers0,
+    influence0)`` state (dynamic repartitioning, DESIGN.md §8): the sampled
+    warm-up is skipped, and a *convergence pre-pass* assigns every point
+    under the previous state, seeds the Hamerly bounds with the exact
+    best/second distances, and measures the candidate center movement
+    ``delta0``. When the previous state is still a fixed point (``delta0``
+    below the movement threshold) the movement loop never runs
+    (``stats["iters"] == 0``) and the final balance pass re-emits the
+    previous assignment unchanged — an unchanged problem migrates zero
+    weight. ``influence0`` (default all-ones) must be replicated across
+    shards exactly like ``centers0``.
+
+    ``prev_assignment`` (warm only, [n] int32 in the same point order)
+    enables *no-op detection*: when the pre-pass assignment equals the
+    previous assignment AND the previous partition is still balanced under
+    the new weights, the solve is skipped outright — labels, cut and comm
+    volume are bit-identical to the previous step, so re-optimizing could
+    only churn data for marginal objective gain. This is what makes
+    ``repartition`` on an unchanged problem a strict fixed point even when
+    the underlying k-means never reached its (rarely attainable) movement
+    threshold.
+
     Returns (assignment, centers, influence, stats).
     """
     n, d = points.shape
@@ -200,11 +225,14 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
     diag = jnp.sqrt(jnp.sum((hi - lo) ** 2))
     delta_threshold = cfg.delta_tol * diag
 
-    n_warm = int(np.ceil(np.log2(max(int(n_global) / cfg.warmup_start, 1)))) \
-        if cfg.warmup else 0
+    n_warm = 0 if warm_start else (
+        int(np.ceil(np.log2(max(int(n_global) / cfg.warmup_start, 1))))
+        if cfg.warmup else 0)
 
     def sample_mask(it):
-        if not cfg.warmup:
+        # warm starts never sample: the movement loop must see the full
+        # weight field even if the caller's cfg still has warmup=True
+        if not cfg.warmup or warm_start:
             return jnp.ones(n, dtype)
         # sample size doubles per round; local prefix of the permutation
         frac = jnp.minimum((cfg.warmup_start * 2.0 ** it) / n_global, 1.0)
@@ -255,13 +283,57 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
         it = carry[0]
         max_delta = carry[6]
         in_warm = it < n_warm
-        return (it < cfg.max_iter) & (in_warm | (max_delta > delta_threshold))
+        keep_going = in_warm | (max_delta > delta_threshold)
+        if warm_start:
+            # never declare convergence while the last balance phase ended
+            # above epsilon — each extra movement iteration buys another
+            # full influence-adaptation budget (at it == 0 the pre-pass
+            # already folded balance into delta0)
+            last_imb = carry[7]["imbalance"][jnp.maximum(it - 1, 0)]
+            keep_going = keep_going | ((it > 0) & (last_imb > cfg.epsilon))
+        return (it < cfg.max_iter) & keep_going
 
     hist0 = {name: jnp.zeros(hist_len, jnp.float32)
              for name in ["skip_fraction", "balance_iters", "max_delta", "imbalance"]}
-    init = (jnp.int32(0), centers0.astype(dtype), jnp.ones(k, dtype),
-            jnp.zeros(n, jnp.int32), jnp.full(n, jnp.inf, dtype),
-            jnp.zeros(n, dtype), jnp.array(jnp.inf, dtype), hist0)
+    centers0 = centers0.astype(dtype)
+    infl0 = (jnp.ones(k, dtype) if influence0 is None
+             else jnp.asarray(influence0, dtype))
+    if warm_start:
+        # Convergence pre-pass: assignment + exact Hamerly bounds under the
+        # previous (centers, influence), and the movement the first
+        # iteration WOULD make. If that movement is already below the
+        # threshold, the while_loop body never runs and the final balance
+        # pass re-emits the previous assignment bit-for-bit.
+        A0, best0, second0 = assign_effective(
+            points, centers0, infl0, cfg.assign_chunk, cfg.assign_backend,
+            cfg.block_p, cfg.block_c)
+        csum0 = _reduce(jax.ops.segment_sum(w[:, None] * points, A0,
+                                            num_segments=k), axis_name)
+        cw0 = _reduce(jax.ops.segment_sum(w, A0, num_segments=k), axis_name)
+        cand0 = jnp.where(cw0[:, None] > 0,
+                          csum0 / jnp.maximum(cw0, 1e-12)[:, None], centers0)
+        delta0 = jnp.max(jnp.sqrt(jnp.sum((cand0 - centers0) ** 2, axis=1)))
+        # an imbalanced previous state is never "converged", no matter how
+        # still its centers: force the movement loop to run so balance is
+        # restored by repeated influence adaptation, not only by the single
+        # final pass
+        imb0 = jnp.max(cw0) / base_target - 1.0
+        balanced0 = imb0 <= cfg.epsilon
+        delta0 = jnp.where(balanced0, delta0, jnp.inf)
+        if prev_assignment is not None:
+            # no-op detection: unchanged assignment + still balanced means
+            # the previous partition is re-emitted verbatim (zero
+            # migration), even if the k-means objective could still improve
+            mismatches = _reduce(
+                jnp.sum((A0 != prev_assignment.astype(jnp.int32))
+                        .astype(jnp.int32)), axis_name)
+            delta0 = jnp.where((mismatches == 0) & balanced0, 0.0, delta0)
+        init = (jnp.int32(0), centers0, infl0, A0, best0, second0,
+                delta0.astype(dtype), hist0)
+    else:
+        init = (jnp.int32(0), centers0, infl0,
+                jnp.zeros(n, jnp.int32), jnp.full(n, jnp.inf, dtype),
+                jnp.zeros(n, dtype), jnp.array(jnp.inf, dtype), hist0)
     it, centers, infl, A, ub, lb, _, hist = jax.lax.while_loop(cond, body, init)
 
     # final full assignment + balance pass on ALL points (mask = 1) so the
@@ -278,6 +350,8 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
     return A, centers, infl, stats
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def balanced_kmeans_jit(points, cfg: BKMConfig, weights=None, centers0=None):
-    return balanced_kmeans(points, cfg, weights, centers0)
+@functools.partial(jax.jit, static_argnames=("cfg", "warm_start"))
+def balanced_kmeans_jit(points, cfg: BKMConfig, weights=None, centers0=None,
+                        influence0=None, warm_start=False):
+    return balanced_kmeans(points, cfg, weights, centers0,
+                           influence0=influence0, warm_start=warm_start)

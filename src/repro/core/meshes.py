@@ -203,6 +203,92 @@ def climate_mesh_25d(n: int, seed: int = 0) -> Mesh:
     return mesh
 
 
+# ---------------------------------------------------------------------------
+# Time-evolving workloads (dynamic repartitioning, DESIGN.md §8)
+#
+# Real simulations (AMR, moving meshes, particle codes) shift their load
+# distribution every few timesteps. These generators model that as a
+# time-dependent node-weight field over a FIXED point set: w(t) =
+# workload.weights_at(points, t). They are written in jax.numpy with a
+# (possibly traced) step index t, so the same generator drives both the
+# host-side repartition loop and the fully jitted lax.scan driver in
+# ``core.timeseries`` — and they are frozen/hashable so they can be static
+# jit arguments.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DriftingHotspot:
+    """A Gaussian load hotspot whose center drifts linearly with time —
+    the canonical "feature moving through the mesh" workload (e.g. a shock
+    front or a tracked storm). ``w = base + amplitude *
+    exp(-|x - c(t)|^2 / (2 sigma^2))`` with ``c(t) = start + t*velocity``.
+    """
+    amplitude: float = 8.0
+    sigma: float = 0.14          # sqrt(0.02): matches the 2.5D climate mesh
+    start: tuple = (0.25, 0.25)
+    velocity: tuple = (0.01, 0.008)
+    base: float = 1.0
+
+    def weights_at(self, points, t):
+        """[n] weights at step ``t`` (int/float, may be a jax tracer)."""
+        import jax.numpy as jnp
+        c = jnp.asarray(self.start) + t * jnp.asarray(self.velocity)
+        d2 = jnp.sum((points[:, :len(self.start)] - c) ** 2, axis=1)
+        return self.base + self.amplitude * jnp.exp(
+            -d2 / (2.0 * self.sigma ** 2))
+
+
+@dataclass(frozen=True)
+class RotatingWave:
+    """An angular density wave rotating around a fixed pivot — load
+    oscillates smoothly through every block in turn (e.g. day/night
+    heating in a climate mesh): ``w = base + amplitude * (1 + cos(lobes *
+    theta(x) - omega * t)) / 2``.
+    """
+    amplitude: float = 6.0
+    lobes: int = 2
+    omega: float = 0.35          # radians per step
+    center: tuple = (0.5, 0.5)
+    base: float = 1.0
+
+    def weights_at(self, points, t):
+        """[n] weights at step ``t`` (int/float, may be a jax tracer)."""
+        import jax.numpy as jnp
+        c = jnp.asarray(self.center)
+        theta = jnp.arctan2(points[:, 1] - c[1], points[:, 0] - c[0])
+        phase = jnp.cos(self.lobes * theta - self.omega * t)
+        return self.base + self.amplitude * 0.5 * (1.0 + phase)
+
+
+@dataclass(frozen=True)
+class MovingRefinement:
+    """AMR-style local refinement: node weights are *multiplied* by
+    ``factor`` inside a disc of ``radius`` around a moving refinement
+    center — the discontinuous analogue of the hotspot (cells inside the
+    refined region carry factor-times the work).
+    """
+    factor: float = 8.0
+    radius: float = 0.18
+    start: tuple = (0.3, 0.3)
+    velocity: tuple = (0.012, 0.009)
+    base: float = 1.0
+
+    def weights_at(self, points, t):
+        """[n] weights at step ``t`` (int/float, may be a jax tracer)."""
+        import jax.numpy as jnp
+        c = jnp.asarray(self.start) + t * jnp.asarray(self.velocity)
+        d2 = jnp.sum((points[:, :len(self.start)] - c) ** 2, axis=1)
+        return self.base * jnp.where(d2 < self.radius ** 2,
+                                     self.factor, 1.0)
+
+
+WORKLOADS = {
+    "drifting_hotspot": DriftingHotspot,
+    "rotating_wave": RotatingWave,
+    "amr_refine": MovingRefinement,
+}
+
+
 REGISTRY = {
     "tri": lambda n, seed=0: grid_triangulation(int(np.sqrt(n)), int(np.sqrt(n)), jitter=0.2, seed=seed),
     "rgg2d": lambda n, seed=0: random_geometric_graph(n, 2, seed=seed),

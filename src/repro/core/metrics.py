@@ -1,4 +1,5 @@
-"""Partition quality metrics (paper Section 2).
+"""Partition quality metrics (paper Section 2) + migration metrics for
+dynamic repartitioning (DESIGN.md §8).
 
 * edge cut          — #edges with endpoints in different blocks
 * comm volume       — per block V_i: sum over v in V_i of the number of
@@ -7,14 +8,33 @@
 * imbalance         — max block weight / ceil(total/k) - 1
 * diameter          — per-block graph diameter lower bound via a few rounds
                       of double-sweep BFS (iFUB-style, paper §5.2.4)
+* migration volume / fraction / retained fraction
+                    — weight that changes blocks between two consecutive
+                      partitions of the same point set (the cost a dynamic
+                      repartitioner minimizes)
 
-All metrics operate on CSR numpy graphs (see meshes.Mesh).
+Graph metrics operate on CSR numpy graphs (see meshes.Mesh). The migration
+metrics are *in-graph*: they dispatch to jax.numpy whenever any input is a
+jax array (so they compose with jit / shard_map in the sharded path and in
+``core.timeseries.simulate_loadbalance_scan``) and to numpy (exact float64)
+on host arrays.
 """
 from __future__ import annotations
 
 import types
 
 import numpy as np
+
+
+def _array_ns(*arrays):
+    """numpy for host arrays, jax.numpy when any input is a jax array or
+    tracer — keeps the migration metrics exact on the host AND traceable
+    in-graph with one implementation."""
+    import jax
+    if any(isinstance(a, jax.Array) for a in arrays):
+        import jax.numpy as jnp
+        return jnp
+    return np
 
 
 def imbalance(part: np.ndarray, k: int, weights: np.ndarray | None = None) -> float:
@@ -31,6 +51,49 @@ def block_sizes(part: np.ndarray, k: int, weights: np.ndarray | None = None) -> 
     if weights is None:
         return np.bincount(part, minlength=k).astype(np.float64)
     return np.bincount(part, weights=weights, minlength=k)
+
+
+def migration_volume(prev: np.ndarray, new: np.ndarray,
+                     weights: np.ndarray | None = None):
+    """Total weight that changed blocks between two partitions.
+
+    ``sum_{v: prev(v) != new(v)} w(v)`` — the amount of simulation data a
+    dynamic load balancer would have to move. Unit weights when ``weights``
+    is None.
+
+    Args:
+        prev: [n] previous block ids.
+        new:  [n] new block ids (same point order).
+        weights: [n] nonneg node weights, or None.
+
+    Returns:
+        Scalar (float64 numpy scalar on host inputs, a traced jax scalar
+        in-graph).
+    """
+    xp = _array_ns(prev, new, weights)
+    moved = xp.asarray(prev) != xp.asarray(new)
+    if weights is None:
+        return xp.sum(moved.astype(xp.float32 if xp is not np
+                                   else np.float64))
+    return xp.sum(xp.where(moved, xp.asarray(weights), 0.0))
+
+
+def migration_fraction(prev: np.ndarray, new: np.ndarray,
+                       weights: np.ndarray | None = None):
+    """``migration_volume / total_weight`` in [0, 1] — the fraction of the
+    workload that moves. Args/Returns as ``migration_volume``."""
+    xp = _array_ns(prev, new, weights)
+    total = (xp.asarray(prev).shape[0] if weights is None
+             else xp.sum(xp.asarray(weights)))
+    return migration_volume(prev, new, weights) / xp.maximum(total, 1e-12)
+
+
+def retained_fraction(prev: np.ndarray, new: np.ndarray,
+                      weights: np.ndarray | None = None):
+    """``1 - migration_fraction``: the fraction of weight that stays in
+    its block across a repartition step. Args/Returns as
+    ``migration_volume``."""
+    return 1.0 - migration_fraction(prev, new, weights)
 
 
 def edge_cut(part: np.ndarray, indptr: np.ndarray, indices: np.ndarray) -> int:

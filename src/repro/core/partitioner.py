@@ -28,8 +28,14 @@ def geographer_partition(points: np.ndarray, k: int,
                          weights: np.ndarray | None = None,
                          cfg: BKMConfig | None = None,
                          seed: int = 0,
-                         return_stats: bool = False):
+                         return_stats: bool = False,
+                         return_state: bool = False):
     """Partition ``points`` into k balanced blocks. Returns [n] block ids.
+
+    ``return_stats=True`` returns ``(labels, stats)``; ``return_state=True``
+    returns ``(labels, centers, influence, stats)`` — the (centers,
+    influence) pair is the warm-start state consumed by
+    ``geographer_repartition`` / ``repro.partition.repartition``.
 
     This remains the raw single-host implementation; prefer the unified
     front door ``repro.partition.partition(problem, method="geographer")``,
@@ -51,6 +57,9 @@ def geographer_partition(points: np.ndarray, k: int,
     A, centers, infl, stats = _run_jit(pts, cfg, w, jnp.asarray(centers0, cfg.dtype))
     out = np.empty(n, dtype=np.int64)
     out[perm] = np.asarray(A)
+    if return_state:
+        return (out, np.asarray(centers), np.asarray(infl),
+                jax.tree.map(np.asarray, stats))
     if return_stats:
         return out, jax.tree.map(np.asarray, stats)
     return out
@@ -59,6 +68,71 @@ def geographer_partition(points: np.ndarray, k: int,
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _run_jit(points, cfg, weights, centers0):
     return balanced_kmeans(points, cfg, weights, centers0)
+
+
+def geographer_repartition(points: np.ndarray, k: int,
+                           centers0: np.ndarray,
+                           influence0: np.ndarray | None = None,
+                           weights: np.ndarray | None = None,
+                           cfg: BKMConfig | None = None,
+                           seed: int = 0,
+                           prev_labels: np.ndarray | None = None):
+    """Warm-started Geographer: balanced k-means resumed from a previous
+    partition's ``(centers0, influence0)`` state, skipping the SFC
+    bootstrap and the sampled warm-up entirely (DESIGN.md §8).
+
+    Args:
+        points:     [n, d] point coordinates (possibly moved since the
+                    previous partition).
+        k:          number of blocks; must match ``centers0.shape[0]``.
+        centers0:   [k, d] centers of the previous partition.
+        influence0: [k] influence of the previous partition (None = ones).
+        weights:    [n] node weights (possibly re-weighted since the
+                    previous partition), or None for unit weights.
+        cfg:        BKMConfig; ``warmup`` is forced off (warm starts never
+                    sample) and ``k`` is forced to match.
+        seed:       permutation seed — pass the SAME seed as the previous
+                    run so the sharded ``devices=1`` path stays bit-for-bit
+                    identical (both permute with the problem seed).
+        prev_labels: [n] previous block ids (original point order). When
+                    given, an unchanged-and-still-balanced partition is
+                    re-emitted verbatim (no-op detection — zero migration,
+                    ``stats["iters"] == 0``).
+
+    Returns:
+        (labels [n] int64, centers [k, d], influence [k], stats dict).
+        ``stats["iters"]`` is the movement-iteration count — 0 when the
+        previous state is still a fixed point of the (unchanged) problem.
+    """
+    cfg = cfg or BKMConfig(k=k, warmup=False)
+    if cfg.k != k or cfg.warmup:
+        cfg = replace(cfg, k=k, warmup=False)
+    if centers0.shape[0] != k:
+        raise ValueError(f"centers0 has {centers0.shape[0]} rows, k={k}")
+    n = points.shape[0]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    pts = jnp.asarray(np.asarray(points, np.float64)[perm], dtype=cfg.dtype)
+    w = None if weights is None else jnp.asarray(np.asarray(weights)[perm],
+                                                 dtype=cfg.dtype)
+    infl0 = (None if influence0 is None
+             else jnp.asarray(influence0, cfg.dtype))
+    prev = (None if prev_labels is None
+            else jnp.asarray(np.asarray(prev_labels)[perm], jnp.int32))
+    A, centers, infl, stats = _run_warm_jit(
+        pts, cfg, w, jnp.asarray(centers0, cfg.dtype), infl0, prev)
+    out = np.empty(n, dtype=np.int64)
+    out[perm] = np.asarray(A)
+    return (out, np.asarray(centers), np.asarray(infl),
+            jax.tree.map(np.asarray, stats))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _run_warm_jit(points, cfg, weights, centers0, influence0,
+                  prev_assignment):
+    return balanced_kmeans(points, cfg, weights, centers0,
+                           influence0=influence0, warm_start=True,
+                           prev_assignment=prev_assignment)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,180 @@
+"""Dynamic load-balancing simulation: perturb → repartition → measure.
+
+The paper solves the cold-start problem; real simulations (AMR, moving
+meshes, particle codes) re-balance every few timesteps. This module drives
+that loop over the time-evolving workloads of ``core.meshes``
+(``WORKLOADS``: drifting Gaussian hotspot, rotating density wave,
+AMR-style moving refinement) and reports, per step, the metrics a dynamic
+load balancer lives by: movement-iteration count, migration volume /
+fraction, retained fraction, and imbalance (DESIGN.md §8).
+
+Two drivers, same semantics:
+
+* ``simulate_loadbalance`` — host loop through the engine front doors
+  (``partition`` / ``repartition``): works with every registry method,
+  warm or cold mode, and ``devices=P``.
+* ``simulate_loadbalance_scan`` — ONE jitted ``lax.scan`` over all T
+  steps for the warm geographer path: the whole perturb → warm-restart →
+  migration-metrics pipeline is in-graph (weights are regenerated from
+  the traced step index, migration is computed with the in-graph metrics)
+  so T repartition steps cost one dispatch. Bit-for-bit equal to the host
+  loop's warm path on the permuted point order (tested in
+  tests/test_repartition.py).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import metrics
+from .balanced_kmeans import BKMConfig, balanced_kmeans
+
+
+def simulate_loadbalance(problem, workload, steps: int = 8, *,
+                         method: str = "geographer", mode: str = "warm",
+                         devices: int | None = None, **opts) -> dict:
+    """Alternate perturb → repartition for ``steps`` steps on the host.
+
+    Step 0 is always a cold ``partition()`` under ``workload.weights_at(
+    points, 0)``; steps 1..T then re-weight the problem and call
+    ``repartition`` against the previous result — warm-started
+    (``mode="warm"``) or cold + relabel-matched (``mode="cold"``, the
+    fair restart baseline).
+
+    Args:
+        problem: a ``partition.PartitionProblem``; its weights are
+            replaced by the workload's per-step field (the problem's own
+            weights are ignored).
+        workload: an object with ``weights_at(points, t) -> [n]`` (see
+            ``core.meshes.WORKLOADS``).
+        steps: number of repartition steps T (>= 1).
+        method: registry method for every step.
+        mode: "warm" or "cold".
+        devices: optional shard count for the multi-device path.
+        **opts: forwarded to ``partition`` / ``repartition``.
+
+    Returns:
+        dict with ``"per_step"`` (list of per-step records: step, iters,
+        imbalance, balanced, migration_volume, migration_fraction,
+        retained_fraction, time_s — plus cut/comm-volume when
+        ``evaluate=True`` is passed through and the problem carries a
+        graph), ``"summary"`` (means + maxima across steps) and the run
+        config. The final ``PartitionResult`` rides at ``"final_result"``
+        (not JSON-serializable; drop it before dumping).
+    """
+    from repro.partition import partition
+    from repro.partition.repartition import repartition
+
+    if mode not in ("warm", "cold"):
+        raise ValueError(f"mode must be 'warm' or 'cold', got {mode!r}")
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+
+    pts = np.asarray(problem.points)
+    w0 = np.asarray(workload.weights_at(pts, 0))
+    prev = partition(problem.replace(weights=w0), method=method,
+                     devices=devices, **opts)
+    records = []
+    for t in range(1, steps + 1):
+        w_t = np.asarray(workload.weights_at(pts, t))
+        prob_t = problem.replace(weights=w_t)
+        t0 = time.perf_counter()
+        res = repartition(prob_t, prev, method=method, devices=devices,
+                          warm=(True if mode == "warm" else False), **opts)
+        dt = time.perf_counter() - t0
+        imb = res.imbalance()
+        mig = res.stats["migration"]
+        rec = {
+            "step": t,
+            "iters": res.stats.get("iters"),
+            "imbalance": imb,
+            "balanced": bool(imb <= problem.epsilon + 1e-6),
+            "migration_volume": mig["volume"],
+            "migration_fraction": mig["fraction"],
+            "retained_fraction": mig["retained_fraction"],
+            "time_s": dt,
+        }
+        if res.quality:        # per-step cut/comm volume via evaluate=True
+            rec.update({k: v for k, v in res.quality.items()
+                        if k not in rec})
+        records.append(rec)
+        prev = res
+    iters = [r["iters"] for r in records if r["iters"] is not None]
+    summary = {
+        "mean_iters": float(np.mean(iters)) if iters else None,
+        "mean_migration_fraction": float(
+            np.mean([r["migration_fraction"] for r in records])),
+        "mean_migration_volume": float(
+            np.mean([r["migration_volume"] for r in records])),
+        "max_imbalance": float(max(r["imbalance"] for r in records)),
+        "all_balanced": bool(all(r["balanced"] for r in records)),
+        "total_time_s": float(sum(r["time_s"] for r in records)),
+    }
+    return {"mode": mode, "method": method, "devices": devices,
+            "steps": steps, "n": problem.n, "k": problem.k,
+            "epsilon": problem.epsilon,
+            "workload": type(workload).__name__,
+            "per_step": records, "summary": summary,
+            "final_result": prev}
+
+
+def simulate_loadbalance_scan(points, centers0, influence0, labels0,
+                              workload, steps: int, cfg: BKMConfig):
+    """T warm-started repartition steps as ONE jitted ``lax.scan``.
+
+    The carry is the warm-start state (centers, influence, labels); each
+    scan step regenerates the weights from the traced step index,
+    warm-restarts balanced k-means, and computes the migration metrics
+    in-graph — no host round-trips between steps.
+
+    Args:
+        points: [n, d] — pass the PERMUTED points (the same permutation
+            the host path derives from the problem seed) for bit-for-bit
+            agreement with ``repartition``'s single-device warm path.
+        centers0: [k, d] initial (cold-start) centers.
+        influence0: [k] initial influence.
+        labels0: [n] int32 initial labels (in the same permuted order).
+        workload: a frozen workload dataclass from ``core.meshes`` (static
+            jit argument — must be hashable).
+        steps: number of scan steps T (static).
+        cfg: BKMConfig with ``warmup=False`` (enforced; warm starts never
+            sample).
+
+    Returns:
+        (final_carry, per_step) where final_carry = (centers [k, d],
+        influence [k], labels [n]) after step T and per_step is a dict of
+        [T]-shaped arrays: "iters", "imbalance", "migration_volume",
+        "migration_fraction", "retained_fraction".
+    """
+    if cfg.warmup:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, warmup=False)
+    return _scan_run(jnp.asarray(points, cfg.dtype), centers0, influence0,
+                     labels0, workload, steps, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("workload", "steps", "cfg"))
+def _scan_run(points, centers0, influence0, labels0, workload, steps, cfg):
+    def step(carry, t):
+        centers, infl, prev_labels = carry
+        w_t = workload.weights_at(points, t).astype(cfg.dtype)
+        A, centers, infl, stats = balanced_kmeans(
+            points, cfg, w_t, centers, influence0=infl,
+            warm_start=True, prev_assignment=prev_labels)
+        frac = metrics.migration_fraction(prev_labels, A, w_t)
+        rec = {"iters": stats["iters"],
+               "imbalance": stats["final_imbalance"],
+               "migration_volume": metrics.migration_volume(
+                   prev_labels, A, w_t),
+               "migration_fraction": frac,
+               "retained_fraction": 1.0 - frac}
+        return (centers, infl, A), rec
+
+    ts = jnp.arange(1, steps + 1, dtype=cfg.dtype)
+    return jax.lax.scan(step, (jnp.asarray(centers0, cfg.dtype),
+                               jnp.asarray(influence0, cfg.dtype),
+                               jnp.asarray(labels0, jnp.int32)), ts)

@@ -1,26 +1,35 @@
 """Unified partitioning engine: one problem type, one ``partition()`` call,
 a pluggable algorithm registry, hierarchical (k1 x k2) recursion, batched
-vmap execution, and a sharded multi-device (shard_map) path via
-``partition(problem, devices=P)``. See DESIGN.md §Partition-engine / §3b.
+vmap execution, a sharded multi-device (shard_map) path via
+``partition(problem, devices=P)``, and dynamic repartitioning via
+``repartition(problem, previous)`` (warm-started balanced k-means +
+migration accounting). See DESIGN.md §Partition-engine / §3b / §8.
 """
 from . import algorithms  # noqa: F401  (populates the registry on import)
 from .batched import (batched_balanced_kmeans, build_refinement_batch,
                       sequential_balanced_kmeans)
-from .distributed import ShardedPartitionProblem, partition_sharded
+from .distributed import (ShardedPartitionProblem, partition_sharded,
+                          repartition_sharded)
 from .engine import partition
 from .hierarchical import factor_k, hierarchical_partition
 from .problem import PartitionProblem, PartitionResult
 from .registry import (UnknownMethodError, available_methods,
                        distributed_methods, get_algorithm,
-                       register_algorithm, resolve_method, supports_devices)
+                       register_algorithm, resolve_method,
+                       supports_devices, supports_warm_start,
+                       warm_start_methods)
+from .repartition import (greedy_center_match, repartition,
+                          weighted_centroids)
 
 __all__ = [
-    "PartitionProblem", "PartitionResult", "partition",
+    "PartitionProblem", "PartitionResult", "partition", "repartition",
     "hierarchical_partition", "factor_k",
     "batched_balanced_kmeans", "sequential_balanced_kmeans",
     "build_refinement_batch",
-    "ShardedPartitionProblem", "partition_sharded",
+    "ShardedPartitionProblem", "partition_sharded", "repartition_sharded",
+    "greedy_center_match", "weighted_centroids",
     "register_algorithm", "get_algorithm", "available_methods",
     "resolve_method", "UnknownMethodError",
     "supports_devices", "distributed_methods",
+    "supports_warm_start", "warm_start_methods",
 ]

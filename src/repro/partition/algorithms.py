@@ -44,7 +44,7 @@ def make_bkm_config(problem: PartitionProblem, k: int | None = None,
 
 
 @register_algorithm("geographer", aliases=("balanced_kmeans", "bkm"),
-                    supports_devices=True)
+                    supports_devices=True, supports_warm_start=True)
 def _geographer(problem: PartitionProblem, devices: int | None = None,
                 bootstrap: str | None = None, **opts) -> PartitionResult:
     if devices is not None:
@@ -55,12 +55,15 @@ def _geographer(problem: PartitionProblem, devices: int | None = None,
         raise TypeError("bootstrap= only applies to the multi-device path "
                         "(pass devices=)")
     cfg = make_bkm_config(problem, **opts)
-    labels, stats = geographer_partition(
+    labels, centers, infl, stats = geographer_partition(
         problem.points, problem.k, weights=problem.weights, cfg=cfg,
-        seed=problem.seed, return_stats=True)
+        seed=problem.seed, return_state=True)
+    # centers/influence ride on the result so repartition() can warm-start
+    # the next solve from this one (DESIGN.md §8)
     return PartitionResult(
         labels=np.asarray(labels, np.int64), k=problem.k,
         method="geographer", problem=problem,
+        centers=centers, influence=infl,
         stats={"levels": [dict(stats)],
                "final_imbalance": float(stats["final_imbalance"])})
 

@@ -78,21 +78,46 @@ class ShardedPartitionProblem:
     Slots past n (when P does not divide n) wrap around to real points at
     weight zero: they influence neither weighted sums nor the (psum'd)
     bounding box, and their labels are discarded on scatter-back.
+
+    Attributes:
+        problem: the source ``PartitionProblem``.
+        devices: shard count P.
+        points: [P, cap, d] float64 — shard-major dealt coordinates.
+        weights: [P, cap] float64 — dealt weights; exactly 0.0 marks a
+            padded slot (the weight also carries the validity signal into
+            the jitted core, which treats ``w > 0`` as "real").
+        gather: [P, cap] int64 — original point id of every slot
+            (``labels[gather[valid]]`` scatters shard labels home).
+        valid: [P, cap] bool — False for padded slots.
     """
     problem: PartitionProblem
     devices: int
-    points: np.ndarray      # [P, cap, d] float64
-    weights: np.ndarray     # [P, cap] float64, 0.0 marks padded slots
-    gather: np.ndarray      # [P, cap] int64 original point ids
-    valid: np.ndarray       # [P, cap] bool, False for padded slots
+    points: np.ndarray
+    weights: np.ndarray
+    gather: np.ndarray
+    valid: np.ndarray
 
     @property
     def cap(self) -> int:
+        """Per-shard slot count, ``ceil(n / P)``."""
         return self.points.shape[1]
 
     @classmethod
     def from_problem(cls, problem: PartitionProblem,
                      devices: int) -> "ShardedPartitionProblem":
+        """Deal ``problem`` onto ``devices`` shards.
+
+        Args:
+            problem: the instance to shard; its seed fixes the
+                permutation so re-sharding is deterministic.
+            devices: shard count P with ``1 <= P <= problem.n``.
+
+        Returns:
+            The static-shape sharded view.
+
+        Raises:
+            ValueError: P < 1 or P > n.
+        """
         P = int(devices)
         if P < 1:
             raise ValueError(f"devices must be >= 1, got {devices}")
@@ -113,8 +138,15 @@ class ShardedPartitionProblem:
                    gather=gather, valid=valid)
 
     def scatter_labels(self, A: np.ndarray) -> np.ndarray:
-        """[P, cap] per-shard labels -> [n] labels in original point order
-        (padded slots dropped)."""
+        """Scatter shard labels back home.
+
+        Args:
+            A: [P, cap] per-shard labels.
+
+        Returns:
+            [n] int64 labels in original point order (padded slots
+            dropped).
+        """
         labels = np.empty(self.problem.n, np.int64)
         labels[self.gather[self.valid]] = np.asarray(A)[self.valid]
         return labels
@@ -123,14 +155,22 @@ class ShardedPartitionProblem:
 @functools.lru_cache(maxsize=64)
 def _build_runner(devices: int, cap: int, dim: int, cfg: BKMConfig,
                   bootstrap: str, n_global: int):
-    """Compile-cached shard_map driver for one (mesh, shapes, cfg) combo."""
+    """Compile-cached shard_map driver for one (mesh, shapes, cfg) combo.
+
+    ``bootstrap`` selects center seeding: "host" (centers0 computed on the
+    host, passed in replicated), "device" (in-graph distributed SFC
+    bootstrap; centers0 input ignored), or "warm" (centers0 AND influence0
+    are the replicated previous-partition state and the k-means core runs
+    with ``warm_start=True`` — the sampled warm-up and the SFC bootstrap
+    are both skipped).
+    """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     mesh = partition_mesh(devices)
     axis = PARTITION_AXIS
 
-    def local_fn(points, weights, centers0):
+    def local_fn(points, weights, centers0, influence0, prev_labels):
         points = points.reshape(cap, dim)
         weights = weights.reshape(cap)
         if bootstrap == "device":
@@ -139,32 +179,56 @@ def _build_runner(devices: int, cap: int, dim: int, cfg: BKMConfig,
                 cfg.k, axis)
         A, centers, infl, stats = balanced_kmeans(
             points, cfg, weights, centers0.astype(cfg.dtype),
-            axis_name=axis, n_global=n_global)
+            axis_name=axis, n_global=n_global,
+            influence0=influence0, warm_start=(bootstrap == "warm"),
+            prev_assignment=(prev_labels.reshape(cap)
+                             if bootstrap == "warm" else None))
         return A[None], centers, infl, stats
 
     inner = shard_map(
         local_fn, mesh=mesh,
-        in_specs=(P(axis), P(axis), P()),
+        in_specs=(P(axis), P(axis), P(), P(), P(axis)),
         out_specs=(P(axis), P(), P(), P()),
         check_rep=False)
     return jax.jit(inner)
 
 
-def geographer_partition_sharded(problem: PartitionProblem, devices: int,
-                                 cfg: BKMConfig | None = None,
-                                 bootstrap: str = "host"):
-    """Raw sharded run. Returns (labels [n] int64, centers, influence,
-    stats) — prefer ``partition(problem, devices=...)``."""
-    if bootstrap not in BOOTSTRAPS:
-        raise ValueError(f"bootstrap must be one of {BOOTSTRAPS}, "
-                         f"got {bootstrap!r}")
-    cfg = cfg or BKMConfig(k=problem.k, epsilon=problem.epsilon)
-    # pin "auto" to a concrete backend *before* tracing the shard_map body
+def _prep_sharded_cfg(problem: PartitionProblem, devices: int,
+                      cfg: BKMConfig):
+    """Shard the problem and pin cfg's "auto" backend to a concrete one
+    *before* tracing the shard_map body. Returns (sharded, cfg)."""
     sp = ShardedPartitionProblem.from_problem(problem, devices)
     cfg = dataclasses.replace(
         cfg, use_kernel=False,
         backend=resolve_assign_backend(cfg.assign_backend, sharded=True,
                                        n_local=sp.cap))
+    return sp, cfg
+
+
+def geographer_partition_sharded(problem: PartitionProblem, devices: int,
+                                 cfg: BKMConfig | None = None,
+                                 bootstrap: str = "host"):
+    """Raw sharded (cold-start) run.
+
+    Args:
+        problem: the partitioning instance; its seed fixes the round-robin
+            deal permutation.
+        devices: number of shards P (1 <= P <= problem.n).
+        cfg: BKMConfig; None uses the problem's (k, epsilon) defaults.
+        bootstrap: "host" (host-side SFC centers, identical to the
+            single-device path) or "device" (in-graph distributed SFC
+            bootstrap).
+
+    Returns:
+        (labels [n] int64 in original point order, centers [k, d],
+        influence [k], stats dict) — prefer the front door
+        ``partition(problem, devices=...)``.
+    """
+    if bootstrap not in BOOTSTRAPS:
+        raise ValueError(f"bootstrap must be one of {BOOTSTRAPS}, "
+                         f"got {bootstrap!r}")
+    cfg = cfg or BKMConfig(k=problem.k, epsilon=problem.epsilon)
+    sp, cfg = _prep_sharded_cfg(problem, devices, cfg)
     if bootstrap == "host":
         centers0 = sfc_initial_centers(
             np.asarray(problem.points, np.float64), cfg.k, problem.weights)
@@ -174,7 +238,67 @@ def geographer_partition_sharded(problem: PartitionProblem, devices: int,
                         problem.n)
     pts = jnp.asarray(sp.points, cfg.dtype)
     w = jnp.asarray(sp.weights, cfg.dtype)
-    A, centers, infl, stats = run(pts, w, jnp.asarray(centers0, cfg.dtype))
+    A, centers, infl, stats = run(pts, w, jnp.asarray(centers0, cfg.dtype),
+                                  jnp.ones(cfg.k, cfg.dtype),
+                                  jnp.zeros(sp.devices * sp.cap, jnp.int32))
+    labels = sp.scatter_labels(np.asarray(jax.device_get(A)))
+    return labels, centers, infl, jax.tree.map(np.asarray, stats)
+
+
+def geographer_repartition_sharded(problem: PartitionProblem, devices: int,
+                                   centers0: np.ndarray,
+                                   influence0: np.ndarray | None = None,
+                                   cfg: BKMConfig | None = None,
+                                   prev_labels: np.ndarray | None = None):
+    """Raw sharded warm-start run: balanced k-means resumed from a previous
+    partition's (centers0, influence0) state, no SFC bootstrap.
+
+    The previous centers and influence are replicated across shards
+    (exactly like every cold run's centers) and the communication pattern
+    stays psum-only — warm starting adds zero new collectives. The shard
+    layout comes from the problem's seed, so ``devices=1`` is bit-for-bit
+    identical to ``core.partitioner.geographer_repartition`` with the same
+    seed.
+
+    Args:
+        problem: the (possibly re-weighted / moved) partitioning instance.
+        devices: number of shards P.
+        centers0: [k, d] previous centers.
+        influence0: [k] previous influence (None = ones).
+        cfg: BKMConfig; ``warmup`` is forced off.
+        prev_labels: [n] previous block ids in original point order; when
+            given, an unchanged-and-still-balanced partition is re-emitted
+            verbatim (no-op detection). Padded slots replicate real
+            points, so the comparison is consistent across the deal.
+
+    Returns:
+        (labels [n] int64, centers [k, d], influence [k], stats dict);
+        ``stats["iters"]`` is 0 when the previous state is still a fixed
+        point. Prefer ``repartition(problem, previous, devices=...)``.
+    """
+    cfg = cfg or BKMConfig(k=problem.k, epsilon=problem.epsilon,
+                           warmup=False)
+    if cfg.warmup:
+        cfg = dataclasses.replace(cfg, warmup=False)
+    if centers0.shape[0] != cfg.k:
+        raise ValueError(f"centers0 has {centers0.shape[0]} rows, "
+                         f"k={cfg.k}")
+    sp, cfg = _prep_sharded_cfg(problem, devices, cfg)
+    run = _build_runner(sp.devices, sp.cap, problem.dim, cfg, "warm",
+                        problem.n)
+    pts = jnp.asarray(sp.points, cfg.dtype)
+    w = jnp.asarray(sp.weights, cfg.dtype)
+    infl0 = (jnp.ones(cfg.k, cfg.dtype) if influence0 is None
+             else jnp.asarray(influence0, cfg.dtype))
+    prev = (np.zeros((sp.devices, sp.cap), np.int32) if prev_labels is None
+            else np.asarray(prev_labels, np.int32)[sp.gather])
+    if prev_labels is None:
+        # no previous labels -> disable no-op detection by making the
+        # dummy never match a real assignment
+        prev -= 1
+    A, centers, infl, stats = run(pts, w, jnp.asarray(centers0, cfg.dtype),
+                                  infl0,
+                                  jnp.asarray(prev.reshape(-1), jnp.int32))
     labels = sp.scatter_labels(np.asarray(jax.device_get(A)))
     return labels, centers, infl, jax.tree.map(np.asarray, stats)
 
@@ -184,10 +308,23 @@ def partition_sharded(problem: PartitionProblem, devices: int, *,
     """Multi-device geographer partition of ``problem`` over ``devices``
     shards (the ``devices=`` path of the ``partition()`` front door).
 
-    ``opts`` are BKMConfig fields, exactly as in the single-device
-    adapter. ``bootstrap`` selects the SFC center seeding: "host"
-    (identical to single-device, the agreement default) or "device"
-    (fully in-graph distributed bootstrap).
+    Args:
+        problem: the partitioning instance (its seed fixes the shard
+            layout permutation).
+        devices: number of shards P; must satisfy 1 <= P <= problem.n and
+            P <= len(jax.devices()).
+        bootstrap: SFC center seeding — "host" (identical to the
+            single-device path, the agreement default) or "device" (fully
+            in-graph distributed bootstrap, O(1)-sized communication).
+        **opts: BKMConfig field overrides, exactly as in the single-device
+            adapter (e.g. ``max_iter=50``, ``warmup=False``); unknown
+            fields raise TypeError.
+
+    Returns:
+        PartitionResult with labels in original point order, the final
+        (centers, influence) state — reusable as a ``repartition()`` warm
+        start — and ``stats`` carrying the k-means iteration history plus
+        ``devices`` / ``bootstrap``.
     """
     from .algorithms import make_bkm_config
     cfg = make_bkm_config(problem, **opts)
@@ -199,3 +336,38 @@ def partition_sharded(problem: PartitionProblem, devices: int, *,
         stats={"levels": [dict(stats)],
                "final_imbalance": float(stats["final_imbalance"]),
                "devices": int(devices), "bootstrap": bootstrap})
+
+
+def repartition_sharded(problem: PartitionProblem, devices: int,
+                        centers0: np.ndarray,
+                        influence0: np.ndarray | None = None,
+                        prev_labels: np.ndarray | None = None,
+                        **opts) -> PartitionResult:
+    """Multi-device warm-started repartition (the ``devices=`` path of the
+    ``repartition()`` front door).
+
+    Args:
+        problem: the perturbed partitioning instance.
+        devices: number of shards P.
+        centers0: [k, d] previous partition's centers.
+        influence0: [k] previous partition's influence (None = ones).
+        prev_labels: [n] previous block ids (enables no-op detection).
+        **opts: BKMConfig field overrides (``warmup`` is forced off).
+
+    Returns:
+        PartitionResult (labels, final centers/influence, stats with
+        ``stats["warm_start"] = True`` and the movement iteration count at
+        ``stats["iters"]``).
+    """
+    from .algorithms import make_bkm_config
+    cfg = make_bkm_config(problem, **dict(opts, warmup=False))
+    labels, centers, infl, stats = geographer_repartition_sharded(
+        problem, devices, centers0, influence0, cfg=cfg,
+        prev_labels=prev_labels)
+    return PartitionResult(
+        labels=labels, k=problem.k, method="geographer", problem=problem,
+        centers=np.asarray(centers), influence=np.asarray(infl),
+        stats={"levels": [dict(stats)],
+               "final_imbalance": float(stats["final_imbalance"]),
+               "iters": int(stats["iters"]),
+               "devices": int(devices), "warm_start": True})

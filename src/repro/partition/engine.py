@@ -45,14 +45,30 @@ def partition(problem: PartitionProblem, method: str = "geographer", *,
               with_diameter: bool = False, **opts) -> PartitionResult:
     """Partition ``problem`` with ``method`` (a registry name).
 
-    ``hierarchy=(k1, k2)`` (or "k1xk2") switches to two-level recursive
-    partitioning with k1*k2 == problem.k. ``devices=P`` runs the sharded
-    multi-device path over P devices (method must support it; with
-    ``hierarchy``, the coarse cut is the distributed pass).
-    ``evaluate=True`` fills ``result.quality`` with the paper's metric set
-    (requires the problem to carry a CSR graph for the graph metrics).
-    Remaining ``opts`` go to the algorithm (e.g. BKMConfig fields for
-    geographer, or ``refine_method``/``batched`` in hierarchical mode).
+    Args:
+        problem: the ``PartitionProblem`` to cut into ``problem.k``
+            balanced blocks.
+        method: registry name (``available_methods()``); aliases resolve,
+            unknown names raise ``UnknownMethodError``.
+        hierarchy: ``(k1, k2)`` tuple or ``"k1xk2"`` string — switches to
+            two-level recursive partitioning with ``k1*k2 == problem.k``.
+        devices: run the sharded multi-device path over P devices (method
+            must be registered with ``supports_devices``; with
+            ``hierarchy``, the coarse cut is the distributed pass).
+        evaluate: fill ``result.quality`` with the paper's metric set
+            (graph metrics require the problem to carry a CSR graph).
+        with_diameter: include per-block diameters in the evaluation.
+        **opts: forwarded to the algorithm — BKMConfig fields for
+            geographer, or ``refine_method`` / ``batched`` /
+            ``coarse_epsilon`` in hierarchical mode; unknown options
+            raise ``TypeError``.
+
+    Returns:
+        A ``PartitionResult`` (labels in original point order, optional
+        centers/influence warm-start state, per-level ``stats``).
+
+    For incremental re-solves against a previous result, see
+    ``repartition()``.
     """
     if not isinstance(problem, PartitionProblem):
         raise TypeError(

@@ -53,12 +53,29 @@ def hierarchical_partition(problem: PartitionProblem,
                            ) -> PartitionResult:
     """Two-level partition of ``problem`` into k = k1*k2 blocks.
 
-    ``method`` cuts the k1 coarse blocks, ``refine_method`` cuts each into
-    k2 sub-blocks; both are registry names. ``batched=True`` runs all k1
-    k-means refinements in a single jitted dispatch. ``devices=P`` runs
-    the *coarse* cut on the sharded multi-device path (the global pass is
-    where the data is big); the per-block refinement stays a host-side
-    batched vmap over blocks that are each 1/k1 of the data.
+    Args:
+        problem: instance with ``problem.k == k1*k2``.
+        k1, k2: hierarchy factors; None auto-factors via ``factor_k``.
+        method: registry name for the coarse k1-way cut.
+        refine_method: registry name refining each block into k2
+            sub-blocks.
+        batched: run all k1 k-means refinements in a single jitted vmap
+            dispatch (bit-for-bit equal to the sequential loop).
+        devices: run the *coarse* cut on the sharded multi-device path
+            (the global pass is where the data is big); the per-block
+            refinement stays a host-side batched vmap over blocks that
+            are each 1/k1 of the data.
+        coarse_epsilon: balance budget of the coarse pass (default
+            epsilon/2 — see the module docstring for why that composes).
+        coarse_opts, refine_opts: per-level algorithm options.
+
+    Returns:
+        ``PartitionResult`` with k1*k2 blocks, block b owning label range
+        [b*k2, (b+1)*k2), and per-level entries in ``stats["levels"]``.
+
+    Raises:
+        ValueError: k1*k2 != problem.k, a coarse block too small to
+            refine, or ``devices=`` with a non-distributed coarse method.
     """
     if k1 is None or k2 is None:
         k1, k2 = factor_k(problem.k)

@@ -19,10 +19,18 @@ import numpy as np
 class PartitionProblem:
     """One partitioning instance.
 
-    points  [n, d] float; d in {2, 3} for the SFC-based methods.
-    weights [n] nonneg float, or None (= unit weights).
-    indptr/indices: optional CSR adjacency (metrics only — the geometric
-    partitioners never read the graph, exactly like the paper).
+    Attributes:
+        points: [n, d] float coordinates; d in {2, 3} for the SFC-based
+            methods.
+        k: number of blocks, ``1 <= k <= n``.
+        weights: [n] nonneg float node weights, or None (= unit weights).
+        epsilon: balance slack — every block must end with weight
+            ``<= (1 + epsilon) * W/k``.
+        indptr, indices: optional CSR adjacency (metrics only — the
+            geometric partitioners never read the graph, exactly like the
+            paper). Must be given together.
+        seed: permutation seed (warm-up sampling order + sharded layout).
+        name: label used in benchmark tables.
     """
     points: np.ndarray
     k: int
@@ -76,13 +84,25 @@ class PartitionProblem:
     @classmethod
     def from_mesh(cls, mesh, k: int, epsilon: float = 0.03,
                   seed: int = 0) -> "PartitionProblem":
-        """Build a problem from a ``core.meshes.Mesh`` (points + CSR graph
-        + optional 2.5D node weights)."""
+        """Build a problem from a ``core.meshes.Mesh``.
+
+        Args:
+            mesh: a Mesh (points + CSR graph + optional 2.5D weights).
+            k: number of blocks.
+            epsilon: balance slack (default 0.03, the paper's setting).
+            seed: permutation seed.
+
+        Returns:
+            A ``PartitionProblem`` carrying the mesh's graph for metrics.
+        """
         return cls(points=mesh.points, k=k, weights=mesh.weights,
                    epsilon=epsilon, indptr=mesh.indptr, indices=mesh.indices,
                    seed=seed, name=mesh.name)
 
     def replace(self, **kw) -> "PartitionProblem":
+        """A copy with ``kw`` fields replaced (validation re-runs) — the
+        idiom for perturbing a problem between ``repartition`` steps,
+        e.g. ``problem.replace(weights=w_t)``."""
         import dataclasses
         return dataclasses.replace(self, **kw)
 
@@ -96,15 +116,29 @@ class PartitionProblem:
 
 @dataclass
 class PartitionResult:
-    """Output of ``partition()`` — always label-complete ([n] ids in
-    [0, k)), optionally with the center-based internals and quality."""
+    """Output of ``partition()`` / ``repartition()``.
+
+    Attributes:
+        labels: [n] int64 block ids in [0, k), original point order.
+        k: number of blocks.
+        method: registry name that produced the result.
+        problem: the source problem (weights/graph for lazy metrics).
+        centers: [k, d] final k-means centers (center-based methods only)
+            — together with ``influence`` this is the warm-start state
+            ``repartition()`` resumes from.
+        influence: [k] final influence (paper Eq. 1 state).
+        stats: solver statistics; per-level entries under ``"levels"``.
+            ``repartition()`` adds ``warm_start``, ``iters``,
+            ``balance_retries`` and ``migration``.
+        quality: lazily computed paper metric set (see ``evaluate``).
+    """
     labels: np.ndarray
     k: int
     method: str
     problem: PartitionProblem | None = None
-    centers: np.ndarray | None = None          # [k, d] (center-based only)
-    influence: np.ndarray | None = None        # [k]
-    stats: dict = field(default_factory=dict)  # per-level under "levels"
+    centers: np.ndarray | None = None
+    influence: np.ndarray | None = None
+    stats: dict = field(default_factory=dict)
     quality: dict | None = None
 
     def imbalance(self) -> float:
@@ -119,8 +153,21 @@ class PartitionResult:
         return metrics.block_sizes(np.asarray(self.labels), self.k, w)
 
     def evaluate(self, with_diameter: bool = False) -> dict:
-        """Compute (and cache) the paper's quality metric set. Graph
-        metrics require the problem to carry a CSR graph."""
+        """Compute (and cache at ``self.quality``) the paper's quality
+        metric set.
+
+        Args:
+            with_diameter: also compute per-block diameter bounds (BFS —
+                noticeably slower on large meshes).
+
+        Returns:
+            dict with ``imbalance`` / ``n_blocks_used`` always, plus
+            ``cut`` / ``maxCommVol`` / ``totalCommVol`` (and diameter
+            stats) when the problem carries a CSR graph.
+
+        Raises:
+            ValueError: the result has no problem attached.
+        """
         from repro.core import metrics
         if self.problem is None:
             raise ValueError("result has no problem attached")

@@ -10,6 +10,17 @@ PartitionResult``. Register with::
 ``get_algorithm`` resolves aliases and raises ``UnknownMethodError`` (a
 ``KeyError``) with the available names for anything unregistered, so typos
 fail loudly at the front door instead of deep inside a jit trace.
+
+Two capability flags ride on each registration:
+
+* ``supports_devices`` — the algorithm understands ``devices=P`` (a
+  multi-device shard_map path); the ``partition()`` front door rejects
+  ``devices=`` for anything else before the algorithm runs.
+* ``supports_warm_start`` — the algorithm can resume from a previous
+  ``PartitionResult``'s (centers, influence) state; ``repartition()``
+  takes the warm path for these and falls back to cold start +
+  relabel-matching for everything else (so migration is still measured
+  fairly for SFC/RCB-style methods).
 """
 from __future__ import annotations
 
@@ -18,6 +29,7 @@ from typing import Callable
 _REGISTRY: dict[str, Callable] = {}
 _ALIASES: dict[str, str] = {}
 _SUPPORTS_DEVICES: set[str] = set()
+_SUPPORTS_WARM_START: set[str] = set()
 
 
 class UnknownMethodError(KeyError):
@@ -25,12 +37,19 @@ class UnknownMethodError(KeyError):
 
 
 def register_algorithm(name: str, aliases: tuple[str, ...] = (),
-                       supports_devices: bool = False):
+                       supports_devices: bool = False,
+                       supports_warm_start: bool = False):
     """Decorator: register ``fn`` under ``name`` (+ aliases).
 
-    ``supports_devices=True`` declares that the algorithm understands the
-    ``devices=`` option (a multi-device shard_map path); the front door
-    rejects ``devices=`` for anything else before the algorithm runs.
+    Args:
+        name: canonical registry key.
+        aliases: extra names resolving to ``name``.
+        supports_devices: declares a multi-device ``devices=`` path.
+        supports_warm_start: declares that ``repartition()`` may warm-start
+            this algorithm from a previous result's (centers, influence).
+
+    Returns:
+        The decorator; the wrapped function is returned unchanged.
     """
     def deco(fn: Callable) -> Callable:
         if name in _REGISTRY:
@@ -38,6 +57,8 @@ def register_algorithm(name: str, aliases: tuple[str, ...] = (),
         _REGISTRY[name] = fn
         if supports_devices:
             _SUPPORTS_DEVICES.add(name)
+        if supports_warm_start:
+            _SUPPORTS_WARM_START.add(name)
         for a in aliases:
             _ALIASES[a] = name
         return fn
@@ -55,6 +76,7 @@ def resolve_method(name: str) -> str:
 
 
 def get_algorithm(name: str) -> Callable:
+    """The registered callable for ``name`` (aliases resolved)."""
     return _REGISTRY[resolve_method(name)]
 
 
@@ -63,9 +85,22 @@ def supports_devices(name: str) -> bool:
     return resolve_method(name) in _SUPPORTS_DEVICES
 
 
+def supports_warm_start(name: str) -> bool:
+    """True when ``name`` (or its alias) can be warm-started by
+    ``repartition()`` from a previous result's (centers, influence)."""
+    return resolve_method(name) in _SUPPORTS_WARM_START
+
+
 def distributed_methods() -> list[str]:
+    """Sorted names of all methods with a multi-device path."""
     return sorted(_SUPPORTS_DEVICES)
 
 
+def warm_start_methods() -> list[str]:
+    """Sorted names of all methods supporting warm-started repartition."""
+    return sorted(_SUPPORTS_WARM_START)
+
+
 def available_methods() -> list[str]:
+    """Sorted canonical names of every registered algorithm."""
     return sorted(_REGISTRY)

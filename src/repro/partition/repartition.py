@@ -1,0 +1,291 @@
+"""``repartition()`` — dynamic repartitioning through the engine.
+
+Parallel simulations change their load distribution every few timesteps
+and must **re**partition cheaply while keeping data migration low. The
+geometric formulation of balanced k-means is exactly where this shines:
+warm-starting from the previous partition's (centers, influence) state
+skips the SFC bootstrap and the sampled warm-up, converges in a handful of
+movement iterations, and — because centers barely move — migrates a small
+fraction of the weight a cold restart would (DESIGN.md §8)::
+
+    from repro.partition import PartitionProblem, partition, repartition
+
+    prob0 = PartitionProblem(points, k=16, weights=w0)
+    prev  = partition(prob0, method="geographer")         # cold start once
+    prob1 = prob0.replace(weights=w1)                     # load drifted
+    res   = repartition(prob1, prev)                      # warm restart
+    res.stats["migration"]["fraction"]                    # weight moved
+    res.stats["iters"]                                    # ~0-5, not ~30
+
+Methods without a warm-startable state (sfc/rcb/rib/multijagged — their
+partitions are recomputed from scratch) fall back to a **cold start +
+relabel matching**: new blocks are greedily matched to the previous blocks
+by center correspondence, so block ids stay stable across steps and
+migration is measured fairly for every method.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import metrics
+from repro.core.partitioner import geographer_repartition
+
+from .engine import partition
+from .problem import PartitionProblem, PartitionResult
+from .registry import resolve_method, supports_warm_start
+
+# Warm-start movement threshold (x bbox diagonal). Cold starts keep the
+# tight default (5e-4) because their centers travel far from the SFC seed;
+# a warm start resumes next to a converged state, where the productive
+# signal is "centers stopped moving at the scale the workload drifted",
+# not the cold threshold that even full runs rarely reach before max_iter.
+WARM_DELTA_TOL = 5e-3
+
+# A warm solve whose final balance pass ends above epsilon is re-warmed
+# from its own output state (the pre-pass detects the imbalance and forces
+# the movement loop to run again) at most this many times.
+MAX_BALANCE_RETRIES = 2
+
+
+def weighted_centroids(points: np.ndarray, labels: np.ndarray, k: int,
+                       weights: np.ndarray | None = None) -> np.ndarray:
+    """[k, d] weighted centroid of every block (empty blocks get the
+    global centroid so matching never sees NaNs).
+
+    Args:
+        points:  [n, d] coordinates.
+        labels:  [n] block ids in [0, k).
+        k:       number of blocks.
+        weights: [n] node weights, or None for unit weights.
+
+    Returns:
+        [k, d] float64 centroids.
+    """
+    pts = np.asarray(points, np.float64)
+    lab = np.asarray(labels)
+    w = np.ones(len(lab)) if weights is None else np.asarray(weights,
+                                                             np.float64)
+    csum = np.zeros((k, pts.shape[1]))
+    cw = np.zeros(k)
+    np.add.at(csum, lab, pts * w[:, None])
+    np.add.at(cw, lab, w)
+    fallback = pts.mean(axis=0) if len(pts) else np.zeros(pts.shape[1])
+    out = np.where(cw[:, None] > 0, csum / np.maximum(cw, 1e-12)[:, None],
+                   fallback)
+    return out
+
+
+def greedy_center_match(new_centers: np.ndarray,
+                        prev_centers: np.ndarray) -> np.ndarray:
+    """Greedy center correspondence: a permutation ``m`` with
+    ``m[new_block] = prev_block`` pairing the globally closest unmatched
+    (new, prev) center pair first.
+
+    Cold restarts return blocks in an arbitrary id order; relabeling
+    through this matching keeps block ids stable across repartition steps
+    so migration volume measures *data movement*, not id shuffling.
+
+    Args:
+        new_centers:  [k, d] centers/centroids of the new partition.
+        prev_centers: [k, d] centers/centroids of the previous partition.
+
+    Returns:
+        [k] int64 permutation mapping new block ids to previous block ids.
+    """
+    new_c = np.asarray(new_centers, np.float64)
+    prev_c = np.asarray(prev_centers, np.float64)
+    if new_c.shape != prev_c.shape:
+        raise ValueError(f"center shape mismatch: {new_c.shape} vs "
+                         f"{prev_c.shape}")
+    k = new_c.shape[0]
+    D = ((new_c[:, None, :] - prev_c[None, :, :]) ** 2).sum(axis=-1)
+    mapping = np.full(k, -1, np.int64)
+    for _ in range(k):
+        i, j = np.unravel_index(np.argmin(D), D.shape)
+        mapping[i] = j
+        D[i, :] = np.inf
+        D[:, j] = np.inf
+    return mapping
+
+
+def _migration_stats(previous: PartitionResult, labels: np.ndarray,
+                     weights: np.ndarray | None) -> dict:
+    vol = float(metrics.migration_volume(previous.labels, labels, weights))
+    frac = float(metrics.migration_fraction(previous.labels, labels,
+                                            weights))
+    return {"volume": vol, "fraction": frac,
+            "retained_fraction": 1.0 - frac}
+
+
+def _check_previous(problem: PartitionProblem, previous: PartitionResult):
+    if not isinstance(previous, PartitionResult):
+        raise TypeError(f"previous must be a PartitionResult, got "
+                        f"{type(previous)}")
+    if previous.k != problem.k:
+        raise ValueError(f"previous partition has k={previous.k}, "
+                         f"problem has k={problem.k}")
+    if len(previous.labels) != problem.n:
+        raise ValueError(
+            f"previous partition labels {len(previous.labels)} points, "
+            f"problem has n={problem.n} (repartition requires the same "
+            "point set, possibly moved or re-weighted)")
+
+
+def _warm_geographer(problem: PartitionProblem, previous: PartitionResult,
+                     devices: int | None, **opts) -> PartitionResult:
+    """Warm-started balanced k-means (+ balance-retry loop): the engine's
+    one warm-start implementation, shared by every method whose registry
+    entry declares ``supports_warm_start`` (currently the geographer
+    family — a new warm-capable algorithm needs its own branch here)."""
+    from .algorithms import make_bkm_config
+    from .distributed import repartition_sharded
+    opts.setdefault("delta_tol", WARM_DELTA_TOL)
+    opts["warmup"] = False
+    centers = np.asarray(previous.centers)
+    infl = (None if previous.influence is None
+            else np.asarray(previous.influence))
+    prev_labels = np.asarray(previous.labels)
+    # the solver balances against the caller's effective epsilon (an
+    # opts override wins over the problem's), so the retry check must too
+    eps_eff = opts.get("epsilon", problem.epsilon)
+    total_iters = 0
+    for attempt in range(MAX_BALANCE_RETRIES + 1):
+        if devices is not None:
+            res = repartition_sharded(problem, devices, centers, infl,
+                                      prev_labels=prev_labels, **opts)
+            iters = res.stats["iters"]
+            imb = res.stats["final_imbalance"]
+            centers, infl = res.centers, res.influence
+            labels = res.labels
+        else:
+            cfg = make_bkm_config(problem, **opts)
+            labels, centers, infl, stats = geographer_repartition(
+                problem.points, problem.k, centers, infl,
+                weights=problem.weights, cfg=cfg, seed=problem.seed,
+                prev_labels=prev_labels)
+            iters = int(stats["iters"])
+            imb = float(stats["final_imbalance"])
+            res = PartitionResult(
+                labels=labels, k=problem.k, method="geographer",
+                problem=problem, centers=centers, influence=infl,
+                stats={"levels": [dict(stats)], "final_imbalance": imb})
+        total_iters += iters
+        if imb <= eps_eff + 1e-6:
+            break
+        prev_labels = np.asarray(labels)
+    res.stats.update({"warm_start": True, "iters": total_iters,
+                      "balance_retries": attempt})   # re-warm solves run
+    return res
+
+
+def _cold_relabel(problem: PartitionProblem, previous: PartitionResult,
+                  method: str, devices: int | None,
+                  **opts) -> PartitionResult:
+    res = partition(problem, method=method, devices=devices, **opts)
+    prev_centers = (np.asarray(previous.centers)
+                    if previous.centers is not None else
+                    weighted_centroids(problem.points, previous.labels,
+                                       problem.k, problem.weights))
+    new_centers = (np.asarray(res.centers) if res.centers is not None else
+                   weighted_centroids(problem.points, res.labels,
+                                      problem.k, problem.weights))
+    mapping = greedy_center_match(new_centers, prev_centers)
+    res.labels = mapping[np.asarray(res.labels)]
+    # carry centers/influence into the matched id space too
+    if res.centers is not None:
+        relabeled = np.empty_like(np.asarray(res.centers))
+        relabeled[mapping] = np.asarray(res.centers)
+        res.centers = relabeled
+    if res.influence is not None:
+        relabeled = np.empty_like(np.asarray(res.influence))
+        relabeled[mapping] = np.asarray(res.influence)
+        res.influence = relabeled
+    res.stats.update({"warm_start": False, "relabel_matched": True})
+    res.stats.setdefault("iters", _stats_iters(res))
+    return res
+
+
+def _stats_iters(res: PartitionResult):
+    """Movement-iteration count of a result, or None for methods without
+    an iteration loop (sfc/rcb/...)."""
+    if "iters" in res.stats:
+        return res.stats["iters"]
+    for lvl in res.stats.get("levels", []):
+        if lvl.get("iters") is not None:
+            v = lvl["iters"]
+            return int(np.max(v)) if np.ndim(v) else int(v)
+    return None
+
+
+def repartition(problem: PartitionProblem, previous: PartitionResult,
+                method: str = "geographer", *,
+                devices: int | None = None, warm: bool | None = None,
+                evaluate: bool = False, with_diameter: bool = False,
+                **opts) -> PartitionResult:
+    """Repartition ``problem`` starting from ``previous`` — the dynamic
+    front door next to ``partition()``.
+
+    Args:
+        problem: the perturbed instance — same point count (and point
+            identity) as ``previous``, typically with drifted weights
+            and/or moved points.
+        previous: the ``PartitionResult`` of the last (re)partition call.
+        method: registry name. Methods with ``supports_warm_start`` (see
+            ``warm_start_methods()``) resume balanced k-means from
+            ``previous.centers`` / ``previous.influence``; all others cold
+            start and are relabel-matched to ``previous`` by greedy center
+            correspondence.
+        devices: run the solve on the sharded multi-device path (the
+            previous centers/influence are replicated, communication stays
+            psum-only; ``devices=1`` is bit-for-bit the single-device
+            path).
+        warm: force (True) or forbid (False) warm starting; None picks
+            warm whenever the method supports it and ``previous`` carries
+            centers. ``warm=False`` with a warm-capable method is the
+            fair "cold restart" baseline: same algorithm, fresh SFC
+            bootstrap, relabel-matched.
+        evaluate: fill ``result.quality`` with the paper metric set.
+        with_diameter: include block diameters in the evaluation.
+        **opts: forwarded to the algorithm (BKMConfig fields for
+            geographer; warm solves default ``delta_tol`` to
+            ``WARM_DELTA_TOL`` and force ``warmup=False``).
+
+    Returns:
+        PartitionResult whose ``stats`` additionally carry
+        ``stats["warm_start"]``, ``stats["iters"]`` (cumulative movement
+        iterations; 0 when ``previous`` is still a fixed point) and
+        ``stats["migration"]`` = {"volume", "fraction",
+        "retained_fraction"} measured against ``previous`` under the NEW
+        weights.
+
+    Raises:
+        ValueError: k/n mismatch with ``previous``, or ``warm=True`` for
+            a method without warm-start support / a previous result
+            without centers.
+    """
+    if not isinstance(problem, PartitionProblem):
+        raise TypeError(
+            f"repartition() takes a PartitionProblem, got {type(problem)}")
+    _check_previous(problem, previous)
+    name = resolve_method(method)
+    can_warm = supports_warm_start(name) and previous.centers is not None
+    if warm is None:
+        warm = can_warm
+    elif warm and not supports_warm_start(name):
+        raise ValueError(
+            f"method {name!r} has no warm-start path; warm=True is "
+            "supported by methods registered with supports_warm_start")
+    elif warm and previous.centers is None:
+        raise ValueError(
+            "previous result carries no centers to warm-start from "
+            "(was it produced by a center-based method?)")
+
+    if warm:
+        res = _warm_geographer(problem, previous, devices, **opts)
+    else:
+        res = _cold_relabel(problem, previous, name, devices, **opts)
+    res.stats["migration"] = _migration_stats(previous, res.labels,
+                                              problem.weights)
+    if evaluate:
+        res.evaluate(with_diameter=with_diameter)
+    return res

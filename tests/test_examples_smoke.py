@@ -1,0 +1,29 @@
+"""Every example must run its --quick mode to completion (exit 0) — the
+docs point users at these entry points, so they can't be allowed to rot."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), os.pardir))
+
+EXAMPLES = [
+    "quickstart.py",
+    "partition_mesh.py",
+    "train_moe_kmeans.py",
+]
+
+
+@pytest.mark.parametrize("script", EXAMPLES)
+def test_example_quick_exits_zero(script):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, os.path.join("examples", script), "--quick"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"{script} --quick failed (exit {proc.returncode})\n"
+        f"--- stdout ---\n{proc.stdout[-2000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-2000:]}")

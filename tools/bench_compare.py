@@ -17,6 +17,10 @@ baselines and exits non-zero on a regression:
   — every baseline (method, devices) row must exist, covering device
   counts {1, 2, 4, 8} — plus ``imbalance``, ``iters`` (slack of 2
   movement iterations) and the ``balanced`` flag.
+* repartition: the warm-vs-cold acceptance floors hold absolutely
+  (``iters_ratio >= 3``, ``migration_ratio <= 0.30``, every step of both
+  runs balanced), and the warm run's mean iterations / mean migration
+  fraction must not regress by more than ``--tolerance`` vs baseline.
 * wall-clock metrics are reported but only gated with ``--gate-time``
   (shared CI runners are noisy); the time gate multiplier is
   ``--time-tolerance`` (default 100%).
@@ -125,12 +129,56 @@ def compare_scaling(base, cur, tol: float, rep: Report,
                  hard=gate_time)
 
 
+ITERS_RATIO_FLOOR = 3.0        # warm needs >= 3x fewer iterations
+MIGRATION_RATIO_CEIL = 0.30    # warm moves <= 30% of cold's weight
+
+
+def compare_repartition(base, cur, tol: float, rep: Report):
+    for fld in ("n", "k", "steps", "workload", "quick"):
+        rep.gate(base.get(fld) == cur.get(fld),
+                 f"repartition.config.{fld}",
+                 "incommensurable runs (regenerate baselines with the "
+                 "same --quick setting): " + _fmt(cur.get(fld),
+                                                  base.get(fld)))
+    s = cur.get("summary", {})
+    # absolute acceptance floors — these hold regardless of the baseline
+    rep.gate(s.get("iters_ratio", 0.0) >= ITERS_RATIO_FLOOR,
+             "repartition.iters_ratio",
+             f"cold/warm iteration ratio {s.get('iters_ratio')} below "
+             f"the >= {ITERS_RATIO_FLOOR}x claim")
+    rep.gate(s.get("migration_ratio", 1.0) <= MIGRATION_RATIO_CEIL,
+             "repartition.migration_ratio",
+             f"warm/cold migration ratio {s.get('migration_ratio')} above "
+             f"the <= {MIGRATION_RATIO_CEIL} claim")
+    for mode in ("warm", "cold"):
+        rep.gate(bool(s.get(f"{mode}_all_balanced", False)),
+                 f"repartition.{mode}.balanced",
+                 "a step exceeded epsilon (see per_step imbalance)")
+    # relative regression vs baseline for the warm run's two headline
+    # metrics (iters get an absolute slack of 1 movement iteration,
+    # migration fraction one of 0.01 — both are small-integer/epsilon
+    # scaled quantities, not pure ratios)
+    bs = base.get("summary", {})
+    rep.gate(not _regressed(s.get("warm_mean_iters"),
+                            bs.get("warm_mean_iters"), tol, 1.0),
+             "repartition.warm_mean_iters",
+             _fmt(s.get("warm_mean_iters"), bs.get("warm_mean_iters")))
+    rep.gate(not _regressed(s.get("warm_mean_migration_fraction"),
+                            bs.get("warm_mean_migration_fraction"),
+                            tol, 0.01),
+             "repartition.warm_mean_migration_fraction",
+             _fmt(s.get("warm_mean_migration_fraction"),
+                  bs.get("warm_mean_migration_fraction")))
+
+
 COMPARATORS = {
     "BENCH_quality.json":
         lambda b, c, a, r: compare_quality(b, c, a.tolerance, r),
     "BENCH_scaling.json":
         lambda b, c, a, r: compare_scaling(b, c, a.tolerance, r,
                                            a.gate_time, a.time_tolerance),
+    "BENCH_repartition.json":
+        lambda b, c, a, r: compare_repartition(b, c, a.tolerance, r),
 }
 
 

@@ -1,0 +1,120 @@
+"""Docs checker (the CI ``docs`` job): markdown link check + executable
+code blocks, so examples in docs can't rot.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_docs.py [--root .] [files...]
+
+Checks, over README.md, DESIGN.md, ROADMAP.md and docs/*.md by default:
+
+* **links** — every relative markdown link ``[text](target)`` must point
+  at an existing file (anchors are stripped; ``http(s)://`` / ``mailto:``
+  targets are skipped — CI shouldn't flake on the network).
+* **python code blocks** — every fenced ```` ```python ```` block must at
+  least *compile*; blocks containing ``>>>`` doctest prompts are executed
+  through :mod:`doctest` and their outputs must match. Blocks tagged
+  ```` ```python no-run ```` are compile-checked only (for illustrative
+  fragments with undefined names).
+
+Exit code 0 when everything passes, 1 otherwise (one line per failure).
+"""
+from __future__ import annotations
+
+import argparse
+import doctest
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```python([^\n]*)\n(.*?)^```", re.M | re.S)
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+DEFAULT_FILES = ("README.md", "DESIGN.md", "ROADMAP.md", "docs/*.md")
+
+
+def check_links(path: str, text: str) -> list[str]:
+    errors = []
+    base = os.path.dirname(path)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_SCHEMES):
+            continue
+        file_part = target.split("#", 1)[0]
+        if not file_part:               # pure in-page anchor
+            continue
+        resolved = os.path.normpath(os.path.join(base, file_part))
+        if not os.path.exists(resolved):
+            errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def check_code_blocks(path: str, text: str) -> list[str]:
+    errors = []
+    runner = doctest.DocTestRunner(optionflags=doctest.ELLIPSIS
+                                   | doctest.NORMALIZE_WHITESPACE)
+    parser = doctest.DocTestParser()
+    for i, m in enumerate(FENCE_RE.finditer(text)):
+        tag, block = m.group(1).strip(), m.group(2)
+        name = f"{path}:block{i}"
+        if ">>>" in block:
+            # a doctest transcript: sources are validated (and run) by the
+            # doctest machinery, not by a whole-block compile()
+            if tag == "no-run":
+                for ex in parser.get_examples(block, name):
+                    try:
+                        compile(ex.source, name, "exec")
+                    except SyntaxError as e:
+                        errors.append(f"{name}: syntax error: {e}")
+                continue
+            test = parser.get_doctest(block, {}, name, path, 0)
+            out = []
+            runner.run(test, out=out.append)
+            if runner.failures:
+                errors.append(f"{name}: doctest failed\n" + "".join(out))
+                runner = doctest.DocTestRunner(
+                    optionflags=doctest.ELLIPSIS
+                    | doctest.NORMALIZE_WHITESPACE)
+        else:
+            try:
+                compile(block, name, "exec")
+            except SyntaxError as e:
+                errors.append(f"{name}: syntax error: {e}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="markdown link + code-block checker")
+    ap.add_argument("files", nargs="*",
+                    help="markdown files (default: README/DESIGN/ROADMAP "
+                         "+ docs/*.md)")
+    ap.add_argument("--root", default=".",
+                    help="repo root the default globs resolve against")
+    args = ap.parse_args(argv)
+
+    patterns = args.files or [os.path.join(args.root, p)
+                              for p in DEFAULT_FILES]
+    files = sorted({f for p in patterns for f in glob.glob(p)})
+    if not files:
+        print("error: no markdown files found", file=sys.stderr)
+        return 2
+
+    errors = []
+    n_blocks = 0
+    for path in files:
+        with open(path) as f:
+            text = f.read()
+        errors += check_links(path, text)
+        errors += check_code_blocks(path, text)
+        n_blocks += len(FENCE_RE.findall(text))
+    for e in errors:
+        print(f"[FAIL] {e}")
+    print(f"[check-docs] {len(files)} file(s), {n_blocks} python "
+          f"block(s), {len(errors)} failure(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
