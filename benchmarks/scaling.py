@@ -17,8 +17,18 @@ map to what is measurable here:
   wall-time per partition call (Fig. 3a analogue);
 * strong scaling — fixed n, growing k (Fig. 3b analogue), flat vs
   hierarchical ``partition(hierarchy=(k1, k2))``.
+* hot loop — one movement-iteration sweep (assignment + per-cluster
+  moment reductions) at n=2^20: the fused assign+reduce backend mode vs
+  the unfused fallback (assignment, then a separate ``segment_moments``
+  sweep — bit-for-bit identical results) vs the legacy pre-fusion hot
+  loop (scatter-masked second-best + three global ``segment_sum``
+  passes, the shape this engine shipped with). Gated by
+  ``tools/bench_compare.py``: fused must be >= 1.3x over legacy,
+  must not lose to the fallback, and must stay bit-exact.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -28,6 +38,8 @@ from repro.partition import PartitionProblem, factor_k, partition
 from .common import md_table, save_bench_json, save_json, timer
 
 SPMD_DEVICE_COUNTS = (1, 2, 4, 8)
+HOTLOOP_N = 1 << 20
+HOTLOOP_K = 64
 
 
 def _available_device_counts():
@@ -125,6 +137,98 @@ def strong_scaling(n: int = 60_000, ks=(4, 8, 16, 32, 64, 128),
     return rows
 
 
+def hotloop(n: int = HOTLOOP_N, k: int = HOTLOOP_K, d: int = 2,
+            reps: int = 5, quick: bool = False):
+    """The paper's hot loop (one movement-iteration sweep) three ways.
+
+    * ``fused``    — backend ``return_moments=True``: assignment + moments
+      in ONE pass over the points (the engine default).
+    * ``fallback`` — the shipped unfused path for backends without moment
+      support: assignment, then a ``segment_moments`` sweep sharing the
+      fused path's reduction structure (results bit-for-bit identical).
+    * ``legacy``   — the pre-fusion hot loop exactly as the seed shipped
+      it: scatter-masked second-best in the assignment plus three global
+      ``segment_sum`` reductions (reads every point twice).
+
+    ``quick`` does not shrink the problem — the gate's n=2^20 case runs
+    in CI too, with the full rep count (the median feeds a hard gate).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import assign_argmin_jnp, segment_moments
+
+    del quick
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.uniform(0, 1, (n, d)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32))
+    ctr = jnp.asarray(rng.uniform(0, 1, (k, d)).astype(np.float32))
+    infl = jnp.ones(k, jnp.float32)
+
+    @jax.jit
+    def fused(p, w_, c, i_):
+        return assign_argmin_jnp(p, c, i_, weights=w_, return_moments=True)
+
+    @jax.jit
+    def fallback(p, w_, c, i_):
+        idx, b, s = assign_argmin_jnp(p, c, i_)
+        return (idx, b, s) + segment_moments(p, w_, idx, b, k)
+
+    @jax.jit
+    def legacy(p, w_, c, i_):
+        inv2 = 1.0 / (i_ * i_)
+        cn = jnp.sum(c * c, axis=1)
+
+        def one_chunk(pc):
+            pn = jnp.sum(pc * pc, axis=1, keepdims=True)
+            eff = jnp.maximum(pn + cn[None, :] - 2.0 * pc @ c.T,
+                              0.0) * inv2[None, :]
+            idx = jnp.argmin(eff, axis=1).astype(jnp.int32)
+            best = jnp.take_along_axis(eff, idx[:, None], axis=1)[:, 0]
+            masked = eff.at[jnp.arange(pc.shape[0]), idx].set(jnp.inf)
+            return idx, best, jnp.min(masked, axis=1)
+
+        chunk = 65536
+        pad = (-p.shape[0]) % chunk
+        pp = jnp.pad(p, ((0, pad), (0, 0)))
+        idx, b, s = jax.lax.map(one_chunk, pp.reshape(-1, chunk, d))
+        idx = idx.reshape(-1)[:p.shape[0]]
+        b = b.reshape(-1)[:p.shape[0]]
+        s = s.reshape(-1)[:p.shape[0]]
+        csum = jax.ops.segment_sum(w_[:, None] * p, idx, num_segments=k)
+        cw = jax.ops.segment_sum(w_, idx, num_segments=k)
+        rad2 = jax.ops.segment_sum(w_ * b, idx, num_segments=k)
+        return idx, b, s, csum, cw, rad2
+
+    fns = {"fused": fused, "fallback": fallback, "legacy": legacy}
+    outs, times = {}, {v: [] for v in fns}
+    for name, f in fns.items():                       # compile
+        outs[name] = jax.block_until_ready(f(pts, w, ctr, infl))
+    for _ in range(reps):                             # interleave reps
+        for name, f in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(pts, w, ctr, infl))
+            times[name].append(time.perf_counter() - t0)
+    med = {name: float(np.median(ts)) for name, ts in times.items()}
+    bitexact = all(bool(jnp.all(a == b))
+                   for a, b in zip(outs["fused"], outs["fallback"]))
+    labels_equal = all(bool(jnp.all(outs["fused"][0] == outs[v][0]))
+                       for v in ("fallback", "legacy"))
+    out = {
+        "n": n, "k": k, "d": d, "reps": reps,
+        "rows": [{"variant": v, "time_s": med[v]} for v in fns],
+        "speedup_vs_legacy": med["legacy"] / med["fused"],
+        "speedup_vs_fallback": med["fallback"] / med["fused"],
+        "bitexact": bitexact, "labels_equal": labels_equal,
+    }
+    print(f"  hotloop n={n} k={k}: "
+          f"fused={med['fused']:.3f}s fallback={med['fallback']:.3f}s "
+          f"legacy={med['legacy']:.3f}s -> {out['speedup_vs_legacy']:.2f}x "
+          f"vs legacy, {out['speedup_vs_fallback']:.2f}x vs fallback, "
+          f"bitexact={bitexact}")
+    return out
+
+
 def run(quick: bool = False, json_out: bool = False):
     print("\n### SPMD scaling — sharded shard_map partitioner, "
           "1/2/4/8 virtual devices (flat vs hierarchical)\n")
@@ -139,7 +243,12 @@ def run(quick: bool = False, json_out: bool = False):
     strong = strong_scaling(quick=quick)
     print(md_table(strong, ["k", "hier", "time_flat_s", "time_hier_s",
                             "imb_flat", "imb_hier"]))
-    out = {"spmd": spmd, "weak": weak, "strong": strong, "quick": quick}
+    print("\n### Hot loop — fused assign+reduce vs unfused "
+          "(one movement-iteration sweep, n=2^20)\n")
+    hot = hotloop(quick=quick)
+    print(md_table(hot["rows"], ["variant", "time_s"]))
+    out = {"spmd": spmd, "weak": weak, "strong": strong, "hotloop": hot,
+           "quick": quick}
     save_json("scaling", out)
     if json_out:
         save_bench_json("scaling", out)

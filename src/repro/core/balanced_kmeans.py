@@ -20,6 +20,15 @@ Faithful to Algorithms 1 + 2 with the following TPU/JAX adaptations
       ``ub += delta/influence`` and ``lb -= max_c delta(c)/influence(c)``.
 * Sampled warm-up (paper §4.5 "random initialization") is implemented with
   a traced sample length and weight masking so shapes stay static.
+* The hot loop is a **fused assign+reduce**: each balance iteration's
+  backend sweep also returns the per-cluster weighted moments (sizes,
+  coordinate sums, radius sums), so the n×d point array is streamed
+  exactly once per iteration — the movement phase's former three
+  ``segment_sum`` passes collapsed into the assignment call
+  (``assign_reduce``; DESIGN.md §4b). Backends without moment support
+  fall back to a separate ``segment_moments`` sweep with the identical
+  reduction structure, keeping fused and unfused results bit-for-bit
+  equal on the ``jnp`` backend.
 
 The same code runs single-device or under ``shard_map`` (pass ``axis_name``)
 — cluster centers and influence are replicated, points are sharded, and the
@@ -55,6 +64,7 @@ class BKMConfig:
     warmup_start: int = 100
     backend: str = "auto"          # kernels.ops assign backend (jnp/pallas)
     use_kernel: bool = False       # deprecated: alias for backend="pallas"
+    fused: bool | None = None      # fused assign+reduce; None = auto
     block_p: int = 1024            # kernel point-tile
     block_c: int = 128             # kernel center-tile
     assign_chunk: int = 65536      # jnp path: point chunk to bound n*k memory
@@ -65,6 +75,10 @@ class BKMConfig:
             warnings.warn(
                 "BKMConfig.use_kernel is deprecated; pass "
                 "backend='pallas' instead", DeprecationWarning, stacklevel=3)
+        if self.max_balance_iter < 1:
+            # the movement moments ride out of the last balance iteration,
+            # so the balance loop must run at least once
+            raise ValueError("max_balance_iter must be >= 1")
 
     @property
     def assign_backend(self) -> str:
@@ -99,6 +113,47 @@ def assign_effective(points, centers, influence, chunk=65536, backend="auto",
     return idx, jnp.sqrt(b), jnp.sqrt(jnp.where(jnp.isfinite(s), s, b))
 
 
+def assign_reduce(points, weights, centers, influence, cfg):
+    """One hot-loop sweep: assignment + per-cluster weighted moments.
+
+    When the resolved backend supports the fused contract (and
+    ``cfg.fused`` is not False) the moments come out of the *same* pass
+    over the points as the assignment; otherwise the backend call is
+    followed by a ``kernels.ops.segment_moments`` sweep that shares the
+    fused path's reduction structure, so both modes return bit-identical
+    results for the ``jnp`` backend.
+
+    Returns ``(idx, best_eff, second_eff, csum, cw, rad2raw)`` with
+    best/second as *true* effective distances (sqrt'd, like
+    ``assign_effective``) and the moments as LOCAL (not psum'd) sums:
+    ``csum[c] = sum w*p``, ``cw[c] = sum w``, ``rad2raw[c] = sum
+    w*best_eff_sq`` (multiply by ``influence[c]^2`` for true distances).
+    """
+    from repro.kernels.ops import (assign_backend, backend_supports_moments,
+                                   segment_moments)
+    fused = cfg.fused
+    if fused is None:
+        fused = backend_supports_moments(cfg.assign_backend)
+    elif fused and not backend_supports_moments(cfg.assign_backend):
+        raise ValueError(
+            f"fused=True but assign backend {cfg.assign_backend!r} does "
+            "not support return_moments; register it with "
+            "supports_moments=True or pass fused=False/None")
+    fn = assign_backend(cfg.assign_backend)
+    if fused:
+        idx, b, s, csum, cw, rad2 = fn(
+            points, centers, influence, chunk=cfg.assign_chunk,
+            block_p=cfg.block_p, block_c=cfg.block_c,
+            weights=weights, return_moments=True)
+    else:
+        idx, b, s = fn(points, centers, influence, chunk=cfg.assign_chunk,
+                       block_p=cfg.block_p, block_c=cfg.block_c)
+        csum, cw, rad2 = segment_moments(points, weights, idx, b, cfg.k,
+                                         chunk=cfg.assign_chunk)
+    return (idx, jnp.sqrt(b), jnp.sqrt(jnp.where(jnp.isfinite(s), s, b)),
+            csum, cw, rad2)
+
+
 def adapt_influence(influence, sizes, target, d_eff, clip):
     """Paper Eq. (1), sign-corrected; oversized clusters lose influence."""
     gamma = target / jnp.maximum(sizes, 1e-12)
@@ -115,27 +170,42 @@ def erode_influence(influence, delta, beta):
 def assign_and_balance(points, w_eff, centers, influence, A_old, ub, lb, cfg,
                        target_weight, axis_name=None, valid=None,
                        n_valid=None):
-    """Algorithm 1. Returns (A, influence, ub, lb, sizes, stats).
+    """Algorithm 1. Returns (A, influence, ub, lb, sizes, csum, rad2sum,
+    stats).
 
     ``w_eff`` already includes the warm-up sample mask. ``target_weight`` is
     the global per-cluster target (psum'd by the caller). ``valid`` marks
     real (non-padded) points and ``n_valid`` their global count — only for
     the skip statistic, so padding and shard count don't distort it.
+
+    Every balance iteration is ONE fused assign+reduce sweep
+    (``assign_reduce``): the per-cluster sizes come out of the same pass
+    as the assignment, and the movement-phase moments (``csum`` weighted
+    coordinate sums, ``rad2sum`` weighted true-distance² sums — both
+    LOCAL, the caller psums them) ride out of the final iteration for
+    free instead of costing three extra sweeps over the points. The
+    Hamerly ``skip`` stays a statistic + bound-retention device: sound
+    bounds make the argmin *unique* whenever ``ub < lb`` fires (strict
+    inequality against every other center), so the freshly computed
+    ``idx`` already equals the retained assignment and the fused moments
+    over ``idx`` are exactly the moments of the returned labels.
     """
     d_eff = cfg.d_eff or points.shape[1]
+    k, d = cfg.k, points.shape[1]
 
     def body(carry):
-        i, A, ub_c, lb_c, infl, _, _, skips = carry
-        idx, best, second = assign_effective(
-            points, centers, infl, cfg.assign_chunk, cfg.assign_backend,
-            cfg.block_p, cfg.block_c)
+        i, A, ub_c, lb_c, infl, _, _, _, _, skips = carry
+        idx, best, second, csum, cw, rad2raw = assign_reduce(
+            points, w_eff, centers, infl, cfg)
         skip = ub_c < lb_c                       # Hamerly test (sound bounds)
         skip_stat = skip if valid is None else (skip & valid)
-        A_new = jnp.where(skip, A, idx)
+        A_new = idx
         ub_n = jnp.where(skip, ub_c, best)
         lb_n = jnp.where(skip, lb_c, second)
-        sizes = jax.ops.segment_sum(w_eff, A_new, num_segments=cfg.k)
-        sizes = _reduce(sizes, axis_name)
+        sizes = _reduce(cw, axis_name)           # == segment_sum(w_eff, A)
+        # true-distance² radius numerator: eff² scales back by infl[A]²,
+        # which is invariant under the later influence rescaling
+        rad2sum = rad2raw * (infl * infl)
         imb = jnp.max(sizes) / target_weight - 1.0
         done = imb <= cfg.epsilon
         infl_new, factor = adapt_influence(infl, sizes, target_weight,
@@ -147,15 +217,18 @@ def assign_and_balance(points, w_eff, centers, influence, A_old, ub, lb, cfg,
         ub_n = ub_n * jnp.where(done, 1.0, ratio[A_new])
         lb_n = lb_n * jnp.where(done, 1.0, jnp.min(ratio))
         skips = skips + jnp.sum(skip_stat.astype(jnp.float32))
-        return i + 1, A_new, ub_n, lb_n, infl_new, sizes, done, skips
+        return (i + 1, A_new, ub_n, lb_n, infl_new, sizes, csum, rad2sum,
+                done, skips)
 
     def cond(carry):
         i, *_, done, _ = carry
         return (i < cfg.max_balance_iter) & (~done)
 
     init = (jnp.int32(0), A_old, ub, lb, influence,
-            jnp.zeros(cfg.k, cfg.dtype), jnp.bool_(False), jnp.float32(0.0))
-    i, A, ub, lb, infl, sizes, done, skips = jax.lax.while_loop(cond, body, init)
+            jnp.zeros(k, cfg.dtype), jnp.zeros((k, d), cfg.dtype),
+            jnp.zeros(k, cfg.dtype), jnp.bool_(False), jnp.float32(0.0))
+    (i, A, ub, lb, infl, sizes, csum, rad2sum, done,
+     skips) = jax.lax.while_loop(cond, body, init)
     # under shard_map, report the *global* skip rate (psum'd numerator over
     # the true global point count) so the statistic is invariant to both
     # the shard count and the per-shard padding
@@ -165,7 +238,7 @@ def assign_and_balance(points, w_eff, centers, influence, A_old, ub, lb, cfg,
                                      else jax.lax.psum(1, axis_name))
     stats = {"balance_iters": i, "balanced": done,
              "skip_fraction": skips / (jnp.maximum(i, 1) * n_valid)}
-    return A, infl, ub, lb, sizes, stats
+    return A, infl, ub, lb, sizes, csum, rad2sum, stats
 
 
 def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
@@ -225,9 +298,25 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
     diag = jnp.sqrt(jnp.sum((hi - lo) ** 2))
     delta_threshold = cfg.delta_tol * diag
 
-    n_warm = 0 if warm_start else (
-        int(np.ceil(np.log2(max(int(n_global) / cfg.warmup_start, 1))))
-        if cfg.warmup else 0)
+    if cfg.warmup and not warm_start:
+        # the warm-up round count is a Python-level loop bound, so the
+        # global point count must be static here. jax versions that
+        # constant-fold psum-of-a-constant make n_global concrete even
+        # under shard_map; where that folding is absent (or a caller
+        # passes a traced value), fail with an actionable error instead
+        # of an opaque tracer-conversion crash.
+        try:
+            ng = int(n_global)
+        except (jax.errors.TracerIntegerConversionError,
+                jax.errors.ConcretizationTypeError) as e:
+            raise ValueError(
+                "balanced_kmeans: warmup=True needs a *static* global "
+                "point count to derive the number of warm-up rounds. "
+                "Under shard_map/axis_name pass n_global=<int global n> "
+                "(the distributed driver does), or disable warmup.") from e
+        n_warm = int(np.ceil(np.log2(max(ng / cfg.warmup_start, 1))))
+    else:
+        n_warm = 0
 
     def sample_mask(it):
         # warm starts never sample: the movement loop must see the full
@@ -249,22 +338,22 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
         # balance the sample against a proportionally reduced bar
         w_round = jnp.maximum(_reduce(jnp.sum(w_eff), axis_name), 1e-12)
         target = base_target * (w_round / total_w)
-        A, infl, ub, lb, sizes, st = assign_and_balance(
+        A, infl, ub, lb, sizes, csum_l, rad2_l, st = assign_and_balance(
             points, w_eff, centers, infl, A, ub, lb, cfg, target, axis_name,
             valid=valid, n_valid=n_global)
-        # --- movement phase (Alg. 2 lines 12-13): two global vector sums
-        wm = w_eff[:, None] * points
-        csum = jax.ops.segment_sum(wm, A, num_segments=k)
-        cw = jax.ops.segment_sum(w_eff, A, num_segments=k)
-        csum = _reduce(csum, axis_name)
-        cw = _reduce(cw, axis_name)
+        # --- movement phase (Alg. 2 lines 12-13): the moments rode out of
+        # the balance loop's final assign+reduce sweep; only the paper's
+        # global vector sums remain ([k, d] + [k] — `sizes` is already the
+        # psum of the weighted counts)
+        csum = _reduce(csum_l, axis_name)
+        cw = sizes
         new_centers = jnp.where(cw[:, None] > 0, csum / jnp.maximum(cw, 1e-12)[:, None],
                                 centers)
         delta = jnp.sqrt(jnp.sum((new_centers - centers) ** 2, axis=1))
-        # --- influence erosion (Eqs. 2-3); beta = avg cluster diameter proxy
-        best_true = ub * infl[A]                 # true distance upper bound
-        rad2 = jax.ops.segment_sum(w_eff * best_true ** 2, A, num_segments=k)
-        rad2 = _reduce(rad2, axis_name) / jnp.maximum(cw, 1e-12)
+        # --- influence erosion (Eqs. 2-3); beta = avg cluster diameter
+        # proxy from the weighted true-distance² sums (exact best distances
+        # from the final sweep, not the retained Hamerly bounds)
+        rad2 = _reduce(rad2_l, axis_name) / jnp.maximum(cw, 1e-12)
         beta = 2.0 * jnp.mean(jnp.sqrt(jnp.maximum(rad2, 0.0)))
         infl_new = erode_influence(infl, delta, beta) if cfg.erosion else infl
         # --- bound relaxation for movement + erosion (Eqs. 4-5, corrected)
@@ -304,12 +393,10 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
         # iteration WOULD make. If that movement is already below the
         # threshold, the while_loop body never runs and the final balance
         # pass re-emits the previous assignment bit-for-bit.
-        A0, best0, second0 = assign_effective(
-            points, centers0, infl0, cfg.assign_chunk, cfg.assign_backend,
-            cfg.block_p, cfg.block_c)
-        csum0 = _reduce(jax.ops.segment_sum(w[:, None] * points, A0,
-                                            num_segments=k), axis_name)
-        cw0 = _reduce(jax.ops.segment_sum(w, A0, num_segments=k), axis_name)
+        A0, best0, second0, csum_l, cw_l, _ = assign_reduce(
+            points, w, centers0, infl0, cfg)
+        csum0 = _reduce(csum_l, axis_name)
+        cw0 = _reduce(cw_l, axis_name)
         cand0 = jnp.where(cw0[:, None] > 0,
                           csum0 / jnp.maximum(cw0, 1e-12)[:, None], centers0)
         delta0 = jnp.max(jnp.sqrt(jnp.sum((cand0 - centers0) ** 2, axis=1)))
@@ -339,7 +426,7 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
     # final full assignment + balance pass on ALL points (mask = 1) so the
     # returned assignment is exact and balanced even if warm-up dominated
     target = base_target
-    A, infl, ub, lb, sizes, st = assign_and_balance(
+    A, infl, ub, lb, sizes, _, _, st = assign_and_balance(
         points, w, centers, infl, A,
         jnp.full(n, jnp.inf, dtype), jnp.zeros(n, dtype), cfg, target,
         axis_name, valid=valid, n_valid=n_global)

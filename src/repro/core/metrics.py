@@ -5,7 +5,8 @@ dynamic repartitioning (DESIGN.md §8).
 * comm volume       — per block V_i: sum over v in V_i of the number of
                       *other* blocks containing a neighbor of v; we report
                       max and total over blocks (maxCommVol / sum CommVol)
-* imbalance         — max block weight / ceil(total/k) - 1
+* imbalance         — max block weight / (total/k) - 1 (same target for
+                      unit and weighted inputs, matching the solvers)
 * diameter          — per-block graph diameter lower bound via a few rounds
                       of double-sweep BFS (iFUB-style, paper §5.2.4)
 * migration volume / fraction / retained fraction
@@ -38,9 +39,15 @@ def _array_ns(*arrays):
 
 
 def imbalance(part: np.ndarray, k: int, weights: np.ndarray | None = None) -> float:
+    """``max block weight / (total weight / k) - 1`` (paper §2).
+
+    The unit-weight and weighted branches use the same ``total/k`` target
+    (no ceil), so ``imbalance(part, k)`` equals
+    ``imbalance(part, k, np.ones(n))`` exactly and both match the balance
+    bar the solvers optimize against."""
     if weights is None:
         sizes = np.bincount(part, minlength=k).astype(np.float64)
-        target = np.ceil(part.shape[0] / k)
+        target = part.shape[0] / k
     else:
         sizes = np.bincount(part, weights=weights, minlength=k)
         target = weights.sum() / k
@@ -120,14 +127,17 @@ def comm_volume(part: np.ndarray, indptr: np.ndarray, indices: np.ndarray,
 
 
 def _bfs_ecc(indptr: np.ndarray, indices: np.ndarray, sub: np.ndarray,
-             start: int) -> tuple[int, int]:
-    """BFS inside vertex subset ``sub`` (bool mask). Returns (ecc, farthest)."""
+             start: int) -> tuple[int, int, int]:
+    """BFS inside vertex subset ``sub`` (bool mask). Returns
+    (ecc, farthest, n_reached) — the reach count doubles as the
+    connectivity check, so no separate sweep is needed."""
     n = len(indptr) - 1
     dist = np.full(n, -1, dtype=np.int64)
     dist[start] = 0
     frontier = np.array([start], dtype=np.int64)
     d = 0
     last = start
+    reached = 1
     while frontier.size:
         nxt = []
         for u in frontier:
@@ -139,7 +149,8 @@ def _bfs_ecc(indptr: np.ndarray, indices: np.ndarray, sub: np.ndarray,
         if frontier.size:
             d += 1
             last = int(frontier[-1])
-    return d, last
+            reached += frontier.size
+    return d, last, reached
 
 
 def block_diameters(part: np.ndarray, indptr: np.ndarray, indices: np.ndarray,
@@ -147,7 +158,10 @@ def block_diameters(part: np.ndarray, indptr: np.ndarray, indices: np.ndarray,
     """Double-sweep BFS lower bound on each block's diameter.
 
     Disconnected blocks get +inf (paper aggregates with harmonic mean to
-    absorb these)."""
+    absorb these). Exactly ``rounds`` BFS sweeps per block: the first
+    sweep (from the block's first member) supplies the eccentricity, the
+    double-sweep restart vertex AND the reach count for the connectivity
+    verdict in one O(V+E) pass."""
     n = len(indptr) - 1
     diams = np.zeros(k, dtype=np.float64)
     for b in range(k):
@@ -157,29 +171,12 @@ def block_diameters(part: np.ndarray, indptr: np.ndarray, indices: np.ndarray,
         sub = np.zeros(n, dtype=bool)
         sub[members] = True
         start = int(members[0])
-        best = 0
-        cur = start
-        reached, _ = _bfs_ecc(indptr, indices, sub, start)
-        # connectivity check: count reachable
-        for _ in range(rounds):
-            ecc, far = _bfs_ecc(indptr, indices, sub, cur)
+        best, cur, reached = _bfs_ecc(indptr, indices, sub, start)
+        for _ in range(rounds - 1):
+            ecc, far, _ = _bfs_ecc(indptr, indices, sub, cur)
             best = max(best, ecc)
             cur = far
-        # disconnected?
-        dist = np.full(n, -1, dtype=np.int64)
-        dist[start] = 0
-        frontier = [start]
-        cnt = 1
-        while frontier:
-            nf = []
-            for u in frontier:
-                nbrs = indices[indptr[u]:indptr[u + 1]]
-                nbrs = nbrs[sub[nbrs] & (dist[nbrs] < 0)]
-                dist[nbrs] = 1
-                cnt += nbrs.size
-                nf.extend(nbrs.tolist())
-            frontier = nf
-        diams[b] = best if cnt == members.size else np.inf
+        diams[b] = best if reached == members.size else np.inf
     return diams
 
 

@@ -148,7 +148,7 @@ def simulate_loadbalance_scan(points, centers0, influence0, labels0,
         (final_carry, per_step) where final_carry = (centers [k, d],
         influence [k], labels [n]) after step T and per_step is a dict of
         [T]-shaped arrays: "iters", "imbalance", "migration_volume",
-        "migration_fraction", "retained_fraction".
+        "migration_fraction", "retained_fraction", "balance_retries".
     """
     if cfg.warmup:
         import dataclasses
@@ -159,19 +159,43 @@ def simulate_loadbalance_scan(points, centers0, influence0, labels0,
 
 @functools.partial(jax.jit, static_argnames=("workload", "steps", "cfg"))
 def _scan_run(points, centers0, influence0, labels0, workload, steps, cfg):
+    # mirror repartition()'s balance-retry loop (DESIGN.md §8): a solve
+    # whose final balance pass ends above epsilon is re-warmed from its
+    # own output state, at most MAX_BALANCE_RETRIES times — the in-graph
+    # twin of the host loop, so host and scan stay step-for-step equal
+    # even on instances where the influence adaptation oscillates
+    from repro.partition.repartition import MAX_BALANCE_RETRIES
+    eps_bar = jnp.asarray(cfg.epsilon + 1e-6, cfg.dtype)
+
     def step(carry, t):
         centers, infl, prev_labels = carry
         w_t = workload.weights_at(points, t).astype(cfg.dtype)
-        A, centers, infl, stats = balanced_kmeans(
-            points, cfg, w_t, centers, influence0=infl,
-            warm_start=True, prev_assignment=prev_labels)
+
+        def retry_cond(state):
+            attempt, _, _, _, _, imb = state
+            return (attempt < MAX_BALANCE_RETRIES + 1) & (
+                (attempt == 0) | (imb > eps_bar))
+
+        def retry_body(state):
+            attempt, c, i_, prev_lab, total, _ = state
+            A, c2, i2, stats = balanced_kmeans(
+                points, cfg, w_t, c, influence0=i_,
+                warm_start=True, prev_assignment=prev_lab)
+            return (attempt + 1, c2, i2, A, total + stats["iters"],
+                    stats["final_imbalance"])
+
+        init = (jnp.int32(0), centers, infl, prev_labels,
+                jnp.int32(0), jnp.asarray(jnp.inf, cfg.dtype))
+        attempt, centers, infl, A, total_iters, imb = jax.lax.while_loop(
+            retry_cond, retry_body, init)
         frac = metrics.migration_fraction(prev_labels, A, w_t)
-        rec = {"iters": stats["iters"],
-               "imbalance": stats["final_imbalance"],
+        rec = {"iters": total_iters,       # cumulative, like the host path
+               "imbalance": imb,
                "migration_volume": metrics.migration_volume(
                    prev_labels, A, w_t),
                "migration_fraction": frac,
-               "retained_fraction": 1.0 - frac}
+               "retained_fraction": 1.0 - frac,
+               "balance_retries": attempt - 1}
         return (centers, infl, A), rec
 
     ts = jnp.arange(1, steps + 1, dtype=cfg.dtype)

@@ -3,6 +3,9 @@
 Computes, for every point p, the cluster c minimizing
 ``sqdist(p, c) / influence(c)^2`` together with the best and second-best
 effective squared distances (needed for the Hamerly bounds, Eqs. 4-5).
+With ``with_moments=True`` the same pass also accumulates the per-cluster
+weighted moments (Alg. 2's movement reductions) in a VMEM block revisited
+across point tiles, so the point array is streamed exactly once.
 
 TPU adaptation of the paper's geometric optimizations (DESIGN.md §4):
 
@@ -16,14 +19,25 @@ TPU adaptation of the paper's geometric optimizations (DESIGN.md §4):
   second-best. Centers are pre-sorted by distance to the local bounding box
   (paper Alg. 1 line 6) so prunable tiles appear late in the ``arbitrary``
   grid dimension.
+* Padded centers (the ``_FAR`` rows the wrapper appends to reach a
+  ``block_c`` multiple) are masked to ``+inf`` effective distance by the
+  static real-center count ``k_real`` — the distance math itself is never
+  trusted for them (``|FAR|^2`` overflows f32 and can turn into NaN via
+  ``inf - inf`` for large-coordinate inputs, which used to corrupt both
+  the argmin and the second-best).
 * Running (best, second, argmin) accumulators live in the output VMEM
-  blocks, revisited across the center-tile grid dimension.
+  blocks, revisited across the center-tile grid dimension. In moments mode
+  the ``[d+2, K]`` moment block (csum rows, weight row, radius row) is
+  revisited across the *point*-tile dimension as well: each point tile
+  adds its one-hot-matmul partial after its last center tile, so both grid
+  dimensions become ``arbitrary`` (sequential) to keep the accumulation
+  well-defined.
 
-Grid: ``(n_point_tiles, n_center_tiles)`` with semantics
-``("parallel", "arbitrary")``. VMEM per step: BP*D + BC*D + BP*BC floats
-(+ 3 BP-sized accumulators) — e.g. BP=1024, BC=128, D<=128 → ~1.2 MB,
-well under the ~16 MB v5e VMEM budget, with BP*BC = 1024x128 matching MXU
-tiling (multiples of 128 on the lane dimension).
+Grid: ``(n_point_tiles, n_center_tiles)``. VMEM per step: BP*D + BC*D +
+BP*BC floats (+ 3 BP-sized accumulators, + BP + (d+2)*K + BP*K in moments
+mode) — e.g. BP=1024, BC=128, D<=128, K=1024 → ~5.5 MB, under the ~16 MB
+v5e VMEM budget, with BP*BC = 1024x128 matching MXU tiling (multiples of
+128 on the lane dimension).
 """
 from __future__ import annotations
 
@@ -39,7 +53,8 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPar
 
 
 def _assign_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
-                   idx_ref, best_ref, second_ref, *, block_c: int):
+                   idx_ref, best_ref, second_ref, *, block_c: int,
+                   k_real: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -64,6 +79,11 @@ def _assign_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
             p, c, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)             # [BP, BC]
         eff = jnp.maximum(sq, 0.0) * inv2                   # [BP, BC]
+        # mask padded (_FAR) centers to +inf: their f32 distance overflows
+        # (or NaNs via inf - inf) and must never reach argmin/second
+        cols = j * block_c + jax.lax.broadcasted_iota(
+            jnp.int32, eff.shape, 1)
+        eff = jnp.where(cols < k_real, eff, jnp.inf)
 
         local_idx = jnp.argmin(eff, axis=1).astype(jnp.int32)
         local_best = jnp.min(eff, axis=1)
@@ -85,6 +105,46 @@ def _assign_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
         idx_ref[...] = new_idx
 
 
+def _assign_moments_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
+                           w_ref, idx_ref, best_ref, second_ref,
+                           moments_ref, *, block_c: int, k_real: int):
+    """Assignment kernel + per-cluster moment accumulation.
+
+    ``moments_ref`` is a ``[d+2, K]`` VMEM block revisited across the
+    whole grid (constant index map): rows ``0..d-1`` hold the weighted
+    coordinate sums, row ``d`` the weighted counts, row ``d+1`` the
+    weighted best effective-sq distances — all in *sorted-center* column
+    space (the wrapper un-sorts). Each point tile contributes its one-hot
+    matmul partial once, after its final center tile.
+    """
+    _assign_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
+                   idx_ref, best_ref, second_ref, block_c=block_c,
+                   k_real=k_real)
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _zero():
+        moments_ref[...] = jnp.zeros_like(moments_ref)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _accumulate():
+        p = points_ref[...]                                  # [BP, D]
+        w = w_ref[...]                                       # [BP]
+        idx = idx_ref[...]                                   # [BP]
+        best = best_ref[...]                                 # [BP]
+        kpad = moments_ref.shape[1]
+        onehot = idx[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (p.shape[0], kpad), 1)                # [BP, K]
+        ww = jnp.where(onehot, w[:, None], 0.0)              # [BP, K]
+        stacked = jnp.concatenate(
+            [p, jnp.ones((p.shape[0], 1), p.dtype), best[:, None]],
+            axis=1)                                          # [BP, D+2]
+        moments_ref[...] += jax.lax.dot_general(
+            stacked, ww, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # [D+2, K]
+
+
 def default_interpret() -> bool:
     """Backend auto-detection: run the Mosaic-compiled kernel on real TPUs,
     the Pallas interpreter everywhere else (CPU CI containers, GPU hosts)."""
@@ -92,12 +152,14 @@ def default_interpret() -> bool:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_p", "block_c", "interpret"))
-def assign_argmin_pallas(points, centers, inv2, tile_bounds,
+                   static_argnames=("k_real", "block_p", "block_c",
+                                    "interpret"))
+def assign_argmin_pallas(points, centers, inv2, tile_bounds, k_real: int,
                          block_p: int = 1024, block_c: int = 128,
                          interpret: bool | None = None):
     """points [N, D], centers [K, D] (pre-padded), inv2 [K] = 1/influence^2,
-    tile_bounds [N/BP, K/BC]. Returns (idx, best_eff_sq, second_eff_sq).
+    tile_bounds [N/BP, K/BC], k_real = number of real (non-_FAR) centers.
+    Returns (idx, best_eff_sq, second_eff_sq).
 
     ``interpret=None`` auto-detects: compiled on TPU, interpret elsewhere.
     Pass an explicit bool to override (e.g. interpret-mode debugging on
@@ -108,7 +170,8 @@ def assign_argmin_pallas(points, centers, inv2, tile_bounds,
     k = centers.shape[0]
     assert n % block_p == 0 and k % block_c == 0
     grid = (n // block_p, k // block_c)
-    kernel = functools.partial(_assign_kernel, block_c=block_c)
+    kernel = functools.partial(_assign_kernel, block_c=block_c,
+                               k_real=k_real)
     idx, best, second = pl.pallas_call(
         kernel,
         grid=grid,
@@ -133,3 +196,55 @@ def assign_argmin_pallas(points, centers, inv2, tile_bounds,
         interpret=interpret,
     )(tile_bounds, points, centers, inv2[None, :])
     return idx, best, second
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k_real", "block_p", "block_c",
+                                    "interpret"))
+def assign_reduce_pallas(points, centers, inv2, tile_bounds, weights,
+                         k_real: int, block_p: int = 1024,
+                         block_c: int = 128,
+                         interpret: bool | None = None):
+    """Fused assign+reduce: one pass over the point tiles returning
+    (idx, best_eff_sq, second_eff_sq, moments [d+2, K]) with the moment
+    block accumulated in VMEM across point tiles (sorted-center columns:
+    rows 0..d-1 weighted coordinate sums, row d weighted counts, row d+1
+    weighted best-eff-sq sums). Args as ``assign_argmin_pallas`` plus
+    ``weights [N]`` (zero marks padded points)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n, d = points.shape
+    k = centers.shape[0]
+    assert n % block_p == 0 and k % block_c == 0
+    grid = (n // block_p, k // block_c)
+    kernel = functools.partial(_assign_moments_kernel, block_c=block_c,
+                               k_real=k_real)
+    idx, best, second, moments = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),            # bounds
+            pl.BlockSpec((block_p, d), lambda i, j: (i, 0)),      # points
+            pl.BlockSpec((block_c, d), lambda i, j: (j, 0)),      # centers
+            pl.BlockSpec((1, block_c), lambda i, j: (0, j)),      # inv2
+            pl.BlockSpec((block_p,), lambda i, j: (i,)),          # weights
+        ],
+        out_specs=[
+            pl.BlockSpec((block_p,), lambda i, j: (i,)),
+            pl.BlockSpec((block_p,), lambda i, j: (i,)),
+            pl.BlockSpec((block_p,), lambda i, j: (i,)),
+            pl.BlockSpec((d + 2, k), lambda i, j: (0, 0)),        # moments
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((d + 2, k), jnp.float32),
+        ],
+        # the moment block accumulates across BOTH grid dimensions, so the
+        # point-tile dimension must be sequential too
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(tile_bounds, points, centers, inv2[None, :], weights)
+    return idx, best, second, moments

@@ -9,13 +9,36 @@ contract::
        chunk, block_p, block_c) -> (idx [n] int32,
                                     best_eff_sq [n], second_eff_sq [n])
 
+Backends registered with ``supports_moments=True`` additionally accept the
+fused assign+reduce mode (the paper's whole movement-iteration hot loop in
+ONE pass over the points)::
+
+    fn(..., weights=[n], return_moments=True)
+        -> (idx, best_eff_sq, second_eff_sq,
+            csum [k,d], cw [k], rad2 [k])
+
+where ``csum[c] = sum_{idx==c} w*p`` (weighted coordinate sums),
+``cw[c] = sum w`` (weighted counts == cluster sizes) and
+``rad2[c] = sum w*best_eff_sq`` (weighted best effective-sq distances, the
+erosion radius numerator before the ``influence^2`` rescale). The core
+falls back to ``segment_moments`` for backends without moment support;
+that helper shares the per-chunk one-hot reduction of the ``jnp`` fused
+path, so for the ``jnp`` backend fused and unfused results are
+**bit-for-bit identical** by construction. The Pallas kernel accumulates
+its moments in an f32 VMEM block across point tiles (TPUs have no f64), so
+its fused moments match the reference to float tolerance, not bitwise.
+
 Registered backends:
 
 * ``jnp``    — chunked dense matmul (|p|^2 + |c|^2 - 2 p.c^T) with the
-               point axis tiled by ``chunk`` to bound the n*k scratch.
+               point axis tiled by ``chunk`` to bound the n*k scratch;
+               fused moments fold into the same chunk loop.
 * ``pallas`` — the fused TPU kernel (assign_kernel.py): tile-level
-               Hamerly/bbox pruning, centers pre-sorted by bbox distance.
-* ``auto``   — resolves to ``pallas`` on TPU hosts and ``jnp`` elsewhere.
+               Hamerly/bbox pruning, centers pre-sorted by bbox distance,
+               moments accumulated in VMEM across point tiles.
+* ``auto``   — resolves to ``pallas`` on TPU hosts (or whenever
+               ``REPRO_PALLAS_INTERPRET=1`` forces interpret mode, so CI
+               exercises the kernel path on CPU) and ``jnp`` elsewhere.
 
 Third-party backends can be added with ``@register_assign_backend(name)``
 (e.g. a CUDA Triton port); ``BKMConfig.backend`` then selects them by
@@ -31,11 +54,12 @@ import os
 import jax
 import jax.numpy as jnp
 
-from .assign_kernel import assign_argmin_pallas, default_interpret
+from .assign_kernel import (assign_argmin_pallas, assign_reduce_pallas,
+                            default_interpret)
 
 _env = os.environ.get("REPRO_PALLAS_INTERPRET")
 _INTERPRET: bool | None = None if _env is None else _env != "0"
-_FAR = 1e30   # padded-center coordinate; effective distance ~1e60, never wins
+_FAR = 1e30   # padded-center coordinate; masked out by k_real in-kernel
 
 
 def _interpret_mode() -> bool:
@@ -47,12 +71,21 @@ def _interpret_mode() -> bool:
 # ---------------------------------------------------------------------------
 
 _ASSIGN_BACKENDS: dict = {}
+_ASSIGN_MOMENTS: set = set()   # backends accepting return_moments=True
 
 
-def register_assign_backend(name: str):
-    """Decorator: register an effective-distance assignment backend."""
+def register_assign_backend(name: str, *, supports_moments: bool = False):
+    """Decorator: register an effective-distance assignment backend.
+
+    ``supports_moments=True`` declares that the backend implements the
+    fused assign+reduce contract (``weights=``/``return_moments=`` keyword
+    arguments, see the module docstring); backends without it fall back to
+    a separate ``segment_moments`` sweep in the k-means core.
+    """
     def deco(fn):
         _ASSIGN_BACKENDS[name] = fn
+        if supports_moments:
+            _ASSIGN_MOMENTS.add(name)
         return fn
     return deco
 
@@ -65,7 +98,11 @@ def resolve_assign_backend(name: str = "auto", *, sharded: bool = False,
                            n_local: int | None = None) -> str:
     """Map ``auto`` to a concrete backend for the current jax platform.
     Keyed off ``default_interpret()`` so the backend choice and the
-    kernel's compiled-vs-interpret decision share one predicate.
+    kernel's compiled-vs-interpret decision share one predicate. When
+    ``REPRO_PALLAS_INTERPRET=1`` explicitly forces interpret mode, ``auto``
+    resolves to ``pallas`` everywhere — that is the CI switch that
+    exercises the kernel code path (including the fused moment
+    accumulators) on CPU-only runners.
 
     ``sharded=True`` marks resolution for a ``shard_map`` body (the
     distributed partitioner): the choice is pinned *before* tracing —
@@ -76,6 +113,8 @@ def resolve_assign_backend(name: str = "auto", *, sharded: bool = False,
     jnp path even on TPU hosts.
     """
     if name == "auto":
+        if _INTERPRET:                 # forced interpret: cover the kernel
+            return "pallas"
         if default_interpret():
             return "jnp"
         if sharded and n_local is not None and n_local < 1024:
@@ -92,33 +131,119 @@ def assign_backend(name: str = "auto"):
     return _ASSIGN_BACKENDS[resolve_assign_backend(name)]
 
 
-@register_assign_backend("jnp")
+def backend_supports_moments(name: str = "auto") -> bool:
+    """True when ``name`` (resolved) implements fused assign+reduce."""
+    return resolve_assign_backend(name) in _ASSIGN_MOMENTS
+
+
+def _chunk_assign(p, cn, centers, inv2):
+    """One dense chunk of the effective-distance argmin. Returns
+    (idx, best, second, onehot) — ``onehot`` [C, k] bool marks each
+    point's winning center and is reused by the fused moment reduction."""
+    pn = jnp.sum(p * p, axis=1, keepdims=True)
+    sq = pn + cn[None, :] - 2.0 * p @ centers.T
+    eff = jnp.maximum(sq, 0.0) * inv2[None, :]
+    idx = jnp.argmin(eff, axis=1).astype(jnp.int32)
+    onehot = idx[:, None] == jnp.arange(eff.shape[1])[None, :]
+    best = jnp.min(eff, axis=1)
+    second = jnp.min(jnp.where(onehot, jnp.inf, eff), axis=1)
+    return idx, best, second, onehot
+
+
+def _chunk_moments(onehot, p, w, best):
+    """Per-chunk weighted moment partial as one [k, d+2] matmul:
+    columns 0..d-1 = sum w*p, column d = sum w, column d+1 = sum w*best.
+    Shared by the fused ``jnp`` backend and ``segment_moments`` so both
+    accumulate in the identical order (bit-for-bit equal results)."""
+    ww = jnp.where(onehot, w[:, None], 0.0)                  # [C, k]
+    stacked = jnp.concatenate(
+        [p, jnp.ones((p.shape[0], 1), p.dtype), best[:, None]], axis=1)
+    return ww.T @ stacked                                    # [k, d+2]
+
+
+def _split_moments(m, d):
+    return m[:, :d], m[:, d], m[:, d + 1]
+
+
+def segment_moments(points, weights, idx, best_sq, k: int, *,
+                    chunk: int = 65536):
+    """Per-cluster weighted moments of an existing assignment — the
+    unfused fallback for assignment backends without moment support.
+
+    Args:
+        points: [n, d] point coordinates.
+        weights: [n] nonneg weights (0 marks padded points).
+        idx: [n] int32 cluster assignment.
+        best_sq: [n] best effective *squared* distances (as returned by
+            the assignment backends).
+        k: number of clusters.
+        chunk: point-axis tile; MUST match the assignment call's chunk for
+            bit-exact agreement with the fused path.
+
+    Returns:
+        (csum [k, d], cw [k], rad2 [k]) — weighted coordinate sums,
+        weighted counts, and weighted best-eff-sq sums. Uses the same
+        per-chunk one-hot matmul partials (and the same cross-chunk
+        summation) as the fused ``jnp`` backend, so the results are
+        bit-for-bit identical to ``return_moments=True``.
+    """
+    n, d = points.shape
+    arange_k = jnp.arange(k)[None, :]
+
+    def one(p, w, ix, b):
+        return _chunk_moments(ix[:, None] == arange_k, p, w, b)
+
+    if n <= chunk:
+        return _split_moments(one(points, weights, idx, best_sq), d)
+    pad = (-n) % chunk
+    p = jnp.pad(points, ((0, pad), (0, 0))).reshape(-1, chunk, d)
+    w = jnp.pad(weights, (0, pad)).reshape(-1, chunk)
+    ix = jnp.pad(idx, (0, pad)).reshape(-1, chunk)
+    b = jnp.pad(best_sq, (0, pad)).reshape(-1, chunk)
+    m = jax.lax.map(lambda a: one(*a), (p, w, ix, b)).sum(axis=0)
+    return _split_moments(m, d)
+
+
+@register_assign_backend("jnp", supports_moments=True)
 def assign_argmin_jnp(points, centers, influence, *, chunk: int = 65536,
-                      block_p: int = 1024, block_c: int = 128):
+                      block_p: int = 1024, block_c: int = 128,
+                      weights=None, return_moments: bool = False):
     """Chunked dense path (the paper's inner loop as one matmul per chunk).
-    ``block_p``/``block_c`` are accepted for contract parity and ignored."""
+    ``block_p``/``block_c`` are accepted for contract parity and ignored.
+
+    With ``return_moments=True`` (requires ``weights``) the per-cluster
+    moment partials are computed inside the same chunk loop while the
+    chunk is hot, so the point array is streamed exactly once; the
+    cross-chunk accumulation matches ``segment_moments`` bit-for-bit.
+    """
     del block_p, block_c
+    if return_moments and weights is None:
+        raise ValueError("return_moments=True requires weights")
     inv2 = 1.0 / (influence * influence)
     cn = jnp.sum(centers * centers, axis=1)
+    n, d = points.shape
 
     def one_chunk(p):
-        pn = jnp.sum(p * p, axis=1, keepdims=True)
-        sq = pn + cn[None, :] - 2.0 * p @ centers.T
-        eff = jnp.maximum(sq, 0.0) * inv2[None, :]
-        idx = jnp.argmin(eff, axis=1).astype(jnp.int32)
-        best = jnp.take_along_axis(eff, idx[:, None], axis=1)[:, 0]
-        masked = eff.at[jnp.arange(p.shape[0]), idx].set(jnp.inf)
-        second = jnp.min(masked, axis=1)
-        return idx, best, second
+        return _chunk_assign(p, cn, centers, inv2)[:3]
 
-    n = points.shape[0]
+    def one_chunk_fused(p, w):
+        idx, best, second, onehot = _chunk_assign(p, cn, centers, inv2)
+        return idx, best, second, _chunk_moments(onehot, p, w, best)
+
     if n <= chunk:
-        return one_chunk(points)
+        if not return_moments:
+            return one_chunk(points)
+        idx, b, s, m = one_chunk_fused(points, weights)
+        return (idx, b, s) + _split_moments(m, d)
     pad = (-n) % chunk
-    pts = jnp.pad(points, ((0, pad), (0, 0)))
-    pts = pts.reshape(-1, chunk, points.shape[1])
-    idx, b, s = jax.lax.map(one_chunk, pts)
-    return idx.reshape(-1)[:n], b.reshape(-1)[:n], s.reshape(-1)[:n]
+    pts = jnp.pad(points, ((0, pad), (0, 0))).reshape(-1, chunk, d)
+    if not return_moments:
+        idx, b, s = jax.lax.map(one_chunk, pts)
+        return idx.reshape(-1)[:n], b.reshape(-1)[:n], s.reshape(-1)[:n]
+    w = jnp.pad(weights, (0, pad)).reshape(-1, chunk)
+    idx, b, s, m = jax.lax.map(lambda a: one_chunk_fused(*a), (pts, w))
+    return ((idx.reshape(-1)[:n], b.reshape(-1)[:n], s.reshape(-1)[:n])
+            + _split_moments(m.sum(axis=0), d))
 
 
 def _tile_bounds(points, centers, inv2, block_p, block_c):
@@ -140,10 +265,18 @@ def _tile_bounds(points, centers, inv2, block_p, block_c):
     return jnp.min(eff, axis=-1)                    # [nPT, nCT]
 
 
-@functools.partial(jax.jit, static_argnames=("block_p", "block_c"))
+@functools.partial(jax.jit, static_argnames=("block_p", "block_c",
+                                             "return_moments"))
 def assign_argmin(points, centers, influence, block_p: int = 1024,
-                  block_c: int = 128):
-    """Drop-in replacement for ref.assign_argmin_ref (same returns)."""
+                  block_c: int = 128, weights=None,
+                  return_moments: bool = False):
+    """Drop-in replacement for ref.assign_argmin_ref (same returns).
+
+    ``return_moments=True`` (requires ``weights``) runs the fused
+    assign+reduce kernel: the per-cluster weighted moments are accumulated
+    in VMEM across point tiles and un-sorted back to original center ids
+    here, so the [n, d] point array is streamed exactly once.
+    """
     n, d = points.shape
     k = centers.shape[0]
     inv2 = 1.0 / (influence * influence)
@@ -166,8 +299,22 @@ def assign_argmin(points, centers, influence, block_p: int = 1024,
     iv2 = jnp.pad(inv2_s, (0, pad_k), constant_values=1.0).astype(jnp.float32)
 
     bounds = _tile_bounds(pts, cts, iv2, block_p, block_c)
+    if return_moments:
+        if weights is None:
+            raise ValueError("return_moments=True requires weights")
+        w = jnp.pad(weights, (0, pad_n)).astype(jnp.float32)
+        idx_s, best, second, m = assign_reduce_pallas(
+            pts, cts, iv2, bounds, w, k_real=k, block_p=block_p,
+            block_c=block_c, interpret=_interpret_mode())
+        # un-sort the [d+2, K_pad] moment block: sorted column j belongs
+        # to original center order[j]; padded columns carry no weight
+        m_orig = jnp.zeros((k, d + 2), jnp.float32).at[order].set(m.T[:k])
+        idx_s, best, second = idx_s[:n], best[:n], second[:n]
+        idx = order[jnp.clip(idx_s, 0, k - 1)].astype(jnp.int32)
+        return (idx, best, second,
+                m_orig[:, :d], m_orig[:, d], m_orig[:, d + 1])
     idx_s, best, second = assign_argmin_pallas(
-        pts, cts, iv2, bounds, block_p=block_p, block_c=block_c,
+        pts, cts, iv2, bounds, k_real=k, block_p=block_p, block_c=block_c,
         interpret=_interpret_mode())
     idx_s, best, second = idx_s[:n], best[:n], second[:n]
     # map sorted-center index back to the original center id
@@ -175,15 +322,17 @@ def assign_argmin(points, centers, influence, block_p: int = 1024,
     return idx, best, second
 
 
-@register_assign_backend("pallas")
+@register_assign_backend("pallas", supports_moments=True)
 def assign_argmin_pallas_backend(points, centers, influence, *,
                                  chunk: int = 65536, block_p: int = 1024,
-                                 block_c: int = 128):
+                                 block_c: int = 128, weights=None,
+                                 return_moments: bool = False):
     """Registry adapter for the Pallas kernel (``chunk`` is ignored: the
     kernel's own point tiling bounds VMEM)."""
     del chunk
     return assign_argmin(points, centers, influence,
-                         block_p=block_p, block_c=block_c)
+                         block_p=block_p, block_c=block_c,
+                         weights=weights, return_moments=return_moments)
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "bk", "softcap"))

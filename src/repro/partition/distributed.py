@@ -56,7 +56,7 @@ import numpy as np
 from repro.core.balanced_kmeans import BKMConfig, balanced_kmeans
 from repro.core.sfc import sfc_initial_centers, sfc_initial_centers_sharded
 from repro.dist.rules import PARTITION_AXIS, partition_mesh
-from repro.kernels.ops import resolve_assign_backend
+from repro.kernels.ops import backend_supports_moments, resolve_assign_backend
 
 from .problem import PartitionProblem, PartitionResult
 
@@ -195,13 +195,19 @@ def _build_runner(devices: int, cap: int, dim: int, cfg: BKMConfig,
 
 def _prep_sharded_cfg(problem: PartitionProblem, devices: int,
                       cfg: BKMConfig):
-    """Shard the problem and pin cfg's "auto" backend to a concrete one
-    *before* tracing the shard_map body. Returns (sharded, cfg)."""
+    """Shard the problem and pin cfg's "auto" backend AND its fused
+    assign+reduce choice to concrete values *before* tracing the shard_map
+    body (both depend on process-global state, not trace-local state).
+    Returns (sharded, cfg). The fused sweep keeps the paper's psum-only
+    communication contract: per balance iteration one [k] size sum, per
+    movement iteration one [k, d] + one [k] moment sum."""
     sp = ShardedPartitionProblem.from_problem(problem, devices)
-    cfg = dataclasses.replace(
-        cfg, use_kernel=False,
-        backend=resolve_assign_backend(cfg.assign_backend, sharded=True,
-                                       n_local=sp.cap))
+    backend = resolve_assign_backend(cfg.assign_backend, sharded=True,
+                                     n_local=sp.cap)
+    fused = (backend_supports_moments(backend) if cfg.fused is None
+             else cfg.fused)
+    cfg = dataclasses.replace(cfg, use_kernel=False, backend=backend,
+                              fused=fused)
     return sp, cfg
 
 

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.ops import assign_argmin
+from repro.kernels.ops import assign_argmin, assign_argmin_jnp, segment_moments
 from repro.kernels.ref import assign_argmin_ref
 
 
@@ -77,3 +77,121 @@ def test_second_best_greater_equal_best():
     pts, ctr, infl = _rand(1024, 64, 2, seed=7)
     _, b, s = assign_argmin(pts, ctr, infl, block_p=256, block_c=32)
     assert bool(jnp.all(s >= b - 1e-7))
+
+
+# ---------------------------------------------------------------------------
+# padded (_FAR) center masking
+# ---------------------------------------------------------------------------
+
+def test_k1_second_is_exact_inf():
+    """k == 1: every point's second-best would be a _FAR padding center.
+    The kernel must mask those to exactly +inf (not a huge finite value,
+    not NaN) so the Hamerly guard in assign_effective fires."""
+    pts, _, _ = _rand(256, 1, 2, seed=11)
+    ctr = jnp.asarray([[0.4, 0.6]], jnp.float32)
+    infl = jnp.ones(1, jnp.float32)
+    i1, b1, s1 = assign_argmin(pts, ctr, infl, block_p=256, block_c=8)
+    i0, b0, s0 = assign_argmin_jnp(pts, ctr, infl)
+    np.testing.assert_array_equal(np.asarray(i1), 0)
+    assert bool(jnp.all(jnp.isinf(s1))) and bool(jnp.all(jnp.isinf(s0)))
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b0),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,k,bc", [(256, 3, 8), (512, 9, 8), (300, 1, 128)])
+def test_padded_centers_large_coordinates(n, k, bc):
+    """Regression: with coordinates large enough that 2*p@c overflows
+    against the _FAR padding rows, ``|p|^2 + |c|^2 - 2 p@c`` became
+    ``inf - inf = NaN`` and corrupted argmin AND second-best (observed:
+    ~51% wrong labels). The k_real mask must keep padded centers out of
+    the distance math entirely."""
+    rng = np.random.default_rng(5)
+    pts = jnp.asarray(rng.uniform(0, 1, (n, 2)) * 1e9, jnp.float32)
+    ctr = jnp.asarray(rng.uniform(0, 1, (k, 2)) * 1e9, jnp.float32)
+    infl = jnp.ones(k, jnp.float32)
+    i1, b1, s1 = assign_argmin(pts, ctr, infl, block_p=256, block_c=bc)
+    i0, b0, s0 = assign_argmin_jnp(pts, ctr, infl)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0))
+    assert not bool(jnp.isnan(b1).any()) and not bool(jnp.isnan(s1).any())
+    # |p|^2+|c|^2-2p.c cancels catastrophically at 1e9-scale coordinates,
+    # so the two matmul orders only agree loosely; the test's subject is
+    # the NaN/label corruption, not the conditioning
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b0), rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# fused assign+reduce (return_moments=True)
+# ---------------------------------------------------------------------------
+
+def _moments_ref(pts, w, idx, best_sq, k):
+    csum = np.zeros((k, pts.shape[1]))
+    cw = np.zeros(k)
+    rad2 = np.zeros(k)
+    np.add.at(csum, idx, np.asarray(w)[:, None] * np.asarray(pts))
+    np.add.at(cw, idx, np.asarray(w))
+    np.add.at(rad2, idx, np.asarray(w) * np.asarray(best_sq))
+    return csum, cw, rad2
+
+
+@pytest.mark.parametrize("n,chunk", [(500, 65536), (5000, 1024)])
+def test_jnp_fused_bitexact_vs_unfused(n, chunk):
+    """The jnp backend's fused moments must equal the unfused
+    assignment + segment_moments fallback BIT-FOR-BIT (they share the
+    per-chunk one-hot reduction), single- and multi-chunk."""
+    pts, ctr, infl = _rand(n, 7, 2, seed=13)
+    w = jnp.asarray(np.random.default_rng(13).uniform(0.5, 2.0, n),
+                    jnp.float32)
+    iF, bF, sF, csum, cw, rad2 = assign_argmin_jnp(
+        pts, ctr, infl, chunk=chunk, weights=w, return_moments=True)
+    i0, b0, s0 = assign_argmin_jnp(pts, ctr, infl, chunk=chunk)
+    m0 = segment_moments(pts, w, i0, b0, 7, chunk=chunk)
+    for a, b in zip((iF, bF, sF, csum, cw, rad2), (i0, b0, s0) + m0):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the moments are the right quantities (float64 oracle)
+    cs, cn_, r2 = _moments_ref(pts, w, np.asarray(i0), b0, 7)
+    np.testing.assert_allclose(np.asarray(csum), cs, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cw), cn_, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rad2), r2, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,k,bp,bc", [
+    (2000, 9, 256, 8),       # multi point-tile, padded center tile
+    (1024, 64, 256, 32),     # multi center-tile
+    (300, 1, 128, 128),      # k == 1
+])
+def test_pallas_fused_moments_match_jnp(n, k, bp, bc):
+    """The Pallas kernel's VMEM-accumulated moments agree with the jnp
+    reference (f32 tile order differs, so tolerance not bitwise); the
+    assignment itself must be identical."""
+    pts, ctr, infl = _rand(n, k, 2, seed=17)
+    w = jnp.asarray(np.random.default_rng(17).uniform(0.5, 2.0, n),
+                    jnp.float32)
+    pf = assign_argmin(pts, ctr, infl, block_p=bp, block_c=bc,
+                       weights=w, return_moments=True)
+    jf = assign_argmin_jnp(pts, ctr, infl, weights=w, return_moments=True)
+    np.testing.assert_array_equal(np.asarray(pf[0]), np.asarray(jf[0]))
+    for a, b in zip(pf[3:], jf[3:]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+    # fused and plain pallas agree on the assignment triple
+    i1, b1, s1 = assign_argmin(pts, ctr, infl, block_p=bp, block_c=bc)
+    np.testing.assert_array_equal(np.asarray(pf[0]), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(pf[1]), np.asarray(b1))
+    np.testing.assert_array_equal(np.asarray(pf[2]), np.asarray(s1))
+
+
+def test_fused_moments_ignore_zero_weight_padding():
+    """Zero-weight (padded) points must contribute nothing to any moment
+    — the sharded driver relies on this for its weight-0 slot padding."""
+    pts, ctr, infl = _rand(400, 5, 2, seed=19)
+    w = jnp.asarray(np.r_[np.ones(300), np.zeros(100)], jnp.float32)
+    _, _, _, csum, cw, rad2 = assign_argmin_jnp(
+        pts, ctr, infl, weights=w, return_moments=True)
+    _, _, _, csum2, cw2, rad22 = assign_argmin_jnp(
+        pts[:300], ctr, infl, weights=w[:300], return_moments=True)
+    np.testing.assert_allclose(np.asarray(csum), np.asarray(csum2),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cw), np.asarray(cw2),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rad2), np.asarray(rad22),
+                               rtol=1e-6, atol=1e-6)

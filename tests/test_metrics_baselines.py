@@ -32,6 +32,31 @@ def test_imbalance_perfect():
     assert metrics.imbalance(part, 4) == 0.0
 
 
+def test_imbalance_unit_weighted_consistent():
+    """Regression: the unit branch used ceil(n/k) as target while the
+    weighted branch used total/k — with k not dividing n the two branches
+    disagreed for the SAME partition. Both must use total/k (paper §2,
+    the bar the solvers balance against)."""
+    part = np.array([0, 0, 1, 1, 2])          # n=5, k=3, max size 2
+    unit = metrics.imbalance(part, 3)
+    weighted = metrics.imbalance(part, 3, np.ones(5))
+    assert unit == pytest.approx(weighted)
+    # the shared target is n/k (no ceil): 2 / (5/3) - 1 = 0.2
+    assert unit == pytest.approx(0.2)
+
+
+def test_imbalance_matches_solver_bar():
+    """A partition exactly at the solver's (1+eps)*W/k bound must measure
+    imbalance == eps, not less (the old ceil'd unit target under-reported
+    whenever k did not divide n)."""
+    # 7 blocks over 100 points: two blocks of 16, five of 13.6 -> use
+    # integer sizes 16,14,14,14,14,14,14
+    sizes = [16, 14, 14, 14, 14, 14, 14]
+    part = np.concatenate([np.full(s, b) for b, s in enumerate(sizes)])
+    expect = 16 / (100 / 7) - 1.0
+    assert metrics.imbalance(part, 7) == pytest.approx(expect)
+
+
 def test_diameter_path_graph():
     """Path graph diameter is exact for double-sweep BFS."""
     n = 50
@@ -56,6 +81,28 @@ def test_disconnected_block_inf_diameter(small_mesh):
     part[-1] = 1
     d = metrics.block_diameters(part, small_mesh.indptr, small_mesh.indices, 2)
     assert np.isinf(d[1])
+
+
+def test_block_diameters_one_bfs_per_round(small_mesh, monkeypatch):
+    """Regression: block_diameters ran a dead duplicate of the first BFS
+    plus a second full connectivity BFS per block (two wasted O(V+E)
+    sweeps). The first double-sweep now carries the reach count, so a
+    block costs exactly ``rounds`` BFS calls — with unchanged results."""
+    calls = {"n": 0}
+    real = metrics._bfs_ecc
+
+    def counting(*args, **kw):
+        calls["n"] += 1
+        return real(*args, **kw)
+
+    monkeypatch.setattr(metrics, "_bfs_ecc", counting)
+    part = (small_mesh.points[:, 0] >= 20).astype(np.int64)
+    d = metrics.block_diameters(part, small_mesh.indptr,
+                                small_mesh.indices, 2, rounds=3)
+    assert calls["n"] == 2 * 3               # k blocks x rounds, no extras
+    assert np.all(np.isfinite(d))            # both halves connected
+    # double-sweep lower bound on a 20x40 grid half: at least the side len
+    assert np.all(d >= 39)
 
 
 @pytest.mark.parametrize("name", list(baselines.BASELINES))

@@ -239,3 +239,97 @@ def test_batched_single_dispatch_stats(problem):
     assert r1.stats["levels"][1]["dispatches"] == 1
     assert r2.stats["levels"][1]["dispatches"] == 4
     np.testing.assert_array_equal(r1.labels, r2.labels)
+
+
+# ---------------------------------------------------------------------------
+# fused assign+reduce vs unfused fallback
+# ---------------------------------------------------------------------------
+
+def _fused_pair(problem, **opts):
+    # pinned to the jnp backend: the bit-exactness contract is per-backend
+    # (the fused jnp path and segment_moments share their reduction
+    # structure; the pallas kernel's f32 VMEM tile accumulation is
+    # tolerance-tested in tests/test_kernels.py instead)
+    a = partition(problem, method="geographer", backend="jnp", fused=True,
+                  **opts)
+    b = partition(problem, method="geographer", backend="jnp", fused=False,
+                  **opts)
+    return a, b
+
+
+@pytest.mark.parametrize("seed,k,warmup", [
+    (0, 16, True), (1, 8, True), (2, 16, False), (3, 32, True),
+])
+def test_fused_bitexact_cold(seed, k, warmup):
+    """Property: the fused assign+reduce hot loop is bit-for-bit identical
+    to the unfused (assignment + segment_moments) fallback — labels,
+    centers AND influence — across seeds, k, and warm-up settings."""
+    mesh = meshes.REGISTRY["delaunay2d"](3000, seed=seed)
+    prob = PartitionProblem.from_mesh(mesh, k=k, epsilon=0.03, seed=seed)
+    a, b = _fused_pair(prob, warmup=warmup)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    np.testing.assert_array_equal(np.asarray(a.centers),
+                                  np.asarray(b.centers))
+    np.testing.assert_array_equal(np.asarray(a.influence),
+                                  np.asarray(b.influence))
+    assert a.imbalance() <= prob.epsilon + 1e-6
+
+
+def test_fused_bitexact_weighted(weighted_problem):
+    a, b = _fused_pair(weighted_problem)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    np.testing.assert_array_equal(np.asarray(a.centers),
+                                  np.asarray(b.centers))
+
+
+def test_fused_bitexact_warm_start(problem):
+    """Warm repartition (pre-pass + movement loop) must also be bit-exact
+    fused vs unfused."""
+    from repro.partition import repartition
+    prev_f = partition(problem, method="geographer", backend="jnp",
+                       fused=True)
+    prev_u = partition(problem, method="geographer", backend="jnp",
+                       fused=False)
+    rng = np.random.default_rng(0)
+    w = 1.0 + rng.uniform(0, 0.4, problem.n)
+    prob2 = problem.replace(weights=w)
+    a = repartition(prob2, prev_f, backend="jnp", fused=True)
+    b = repartition(prob2, prev_u, backend="jnp", fused=False)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    np.testing.assert_array_equal(np.asarray(a.centers),
+                                  np.asarray(b.centers))
+    assert a.stats["iters"] == b.stats["iters"]
+
+
+def test_pallas_fused_end_to_end(problem):
+    """The pallas backend defaults to the fused kernel (VMEM moment
+    accumulators); the full solve must stay balanced and cover every
+    block. Bitwise parity with jnp is not expected (f32 tile order);
+    the kernel-level agreement is tolerance-tested in test_kernels.py."""
+    res = partition(problem, method="geographer", backend="pallas")
+    assert res.imbalance() <= problem.epsilon + 1e-6
+    assert len(np.unique(res.labels)) == problem.k
+
+
+def test_fused_true_requires_capable_backend(problem):
+    """fused=True with a backend that lacks moment support must fail
+    loudly, not silently fall back."""
+    from repro.kernels.ops import register_assign_backend, _ASSIGN_BACKENDS
+    from repro.kernels.ops import assign_argmin_jnp
+
+    @register_assign_backend("_nomoments_test")
+    def _plain(points, centers, influence, *, chunk=65536, block_p=1024,
+               block_c=128):
+        return assign_argmin_jnp(points, centers, influence, chunk=chunk)
+
+    try:
+        with pytest.raises(ValueError, match="support"):
+            partition(problem, method="geographer",
+                      backend="_nomoments_test", fused=True)
+        # fused=None auto-falls back to the unfused path and still matches
+        res = partition(problem, method="geographer",
+                        backend="_nomoments_test")
+        ref = partition(problem, method="geographer", backend="jnp")
+        np.testing.assert_array_equal(res.labels, ref.labels)
+    finally:
+        _ASSIGN_BACKENDS.pop("_nomoments_test", None)

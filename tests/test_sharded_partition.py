@@ -16,6 +16,7 @@ points per round, which on small problems can steer k-means to a
 bound and quality invariants are guaranteed, not label agreement.
 """
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -151,6 +152,71 @@ def test_device_bootstrap_balances(problem):
     assert res.imbalance() <= problem.epsilon + 1e-6
     assert len(np.unique(res.labels)) == problem.k
     assert res.stats["bootstrap"] == "device"
+
+
+@needs8
+@pytest.mark.parametrize("warm", [False, True])
+def test_fused_bitexact_sharded(problem, warm):
+    """Fused assign+reduce vs unfused fallback on the devices=4 path:
+    per-shard sweeps + the same psums must stay bit-for-bit identical,
+    cold and warm-started."""
+    from repro.partition import repartition
+    if warm:
+        prev = partition(problem, method="geographer", devices=4,
+                         backend="jnp")
+        rng = np.random.default_rng(1)
+        prob2 = problem.replace(weights=1.0 + rng.uniform(0, 0.4, problem.n))
+        a = repartition(prob2, prev, devices=4, backend="jnp", fused=True)
+        b = repartition(prob2, prev, devices=4, backend="jnp", fused=False)
+        assert a.stats["iters"] == b.stats["iters"]
+    else:
+        a = partition(problem, method="geographer", devices=4,
+                      backend="jnp", fused=True)
+        b = partition(problem, method="geographer", devices=4,
+                      backend="jnp", fused=False)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    np.testing.assert_array_equal(np.asarray(a.centers),
+                                  np.asarray(b.centers))
+    np.testing.assert_array_equal(np.asarray(a.influence),
+                                  np.asarray(b.influence))
+
+
+@needs8
+def test_warmup_under_shard_map_needs_static_n_global():
+    """Regression: balanced_kmeans(warmup=True) under shard_map derives
+    the warm-up round count from the global point count — a Python loop
+    bound. A traced n_global used to die with an opaque tracer-conversion
+    error deep in int(); it must raise an actionable ValueError instead
+    (and a static n_global — what the distributed driver passes — must
+    keep working)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.balanced_kmeans import BKMConfig, balanced_kmeans
+    from repro.dist.rules import PARTITION_AXIS, partition_mesh
+
+    mesh = partition_mesh(4)
+    pts = np.random.default_rng(0).uniform(0, 1, (1024, 2)).astype(np.float32)
+    cfg = BKMConfig(k=4, warmup=True, backend="jnp")
+
+    def run(traced_n_global):
+        def local(p, ng):
+            A, *_ = balanced_kmeans(
+                p.reshape(256, 2), cfg, axis_name=PARTITION_AXIS,
+                n_global=(ng if traced_n_global else 1024))
+            return A[None]
+        f = jax.jit(shard_map(local, mesh=mesh,
+                              in_specs=(P(PARTITION_AXIS), P()),
+                              out_specs=P(PARTITION_AXIS), check_rep=False))
+        return f(jnp.asarray(pts), jnp.asarray(1024))
+
+    # a traced global count cannot size the warm-up schedule
+    with pytest.raises(ValueError, match="static"):
+        run(traced_n_global=True)
+    # the supported spelling: static python int
+    labels = np.asarray(run(traced_n_global=False))
+    assert labels.shape == (4, 256)
+    assert set(np.unique(labels)) <= set(range(4))
 
 
 def test_devices_rejected_for_host_only_methods(problem):

@@ -17,6 +17,12 @@ baselines and exits non-zero on a regression:
   — every baseline (method, devices) row must exist, covering device
   counts {1, 2, 4, 8} — plus ``imbalance``, ``iters`` (slack of 2
   movement iterations) and the ``balanced`` flag.
+* scaling ``hotloop`` section: the fused assign+reduce sweep must be
+  bit-exact vs the unfused fallback and >= 1.3x over the legacy
+  two-sweep hot loop (absolute floors, independent of the baseline
+  values); the break-even-vs-fallback floor is wall-clock-noise-bound
+  and therefore soft unless ``--gate-time``. The (n, k) config must
+  match the baseline.
 * repartition: the warm-vs-cold acceptance floors hold absolutely
   (``iters_ratio >= 3``, ``migration_ratio <= 0.30``, every step of both
   runs balanced), and the warm run's mean iterations / mean migration
@@ -94,12 +100,49 @@ def compare_quality(base, cur, tol: float, rep: Report):
                      f"{where}.{met}", _fmt(c.get(met), b.get(met)))
 
 
+HOTLOOP_SPEEDUP_FLOOR = 1.3    # fused >= 1.3x over the legacy hot loop
+HOTLOOP_FALLBACK_FLOOR = 0.9   # fusing must never cost (noise slack)
+
+
+def compare_hotloop(base, cur, rep: Report, gate_time: bool):
+    hot = cur.get("hotloop")
+    if hot is None:
+        rep.add(FAIL, "scaling.hotloop",
+                "hot-loop section missing from current run")
+        return
+    bhot = base.get("hotloop", {})
+    for fld in ("n", "k"):
+        rep.gate(bhot.get(fld) == hot.get(fld),
+                 f"scaling.hotloop.config.{fld}",
+                 "incommensurable hot-loop runs: "
+                 + _fmt(hot.get(fld), bhot.get(fld)))
+    rep.gate(bool(hot.get("bitexact", False)), "scaling.hotloop.bitexact",
+             "fused and unfused-fallback results are not bit-identical")
+    rep.gate(bool(hot.get("labels_equal", False)),
+             "scaling.hotloop.labels",
+             "hot-loop variants disagree on the assignment")
+    rep.gate(hot.get("speedup_vs_legacy", 0.0) >= HOTLOOP_SPEEDUP_FLOOR,
+             "scaling.hotloop.speedup_vs_legacy",
+             f"fused speedup {hot.get('speedup_vs_legacy')} below the "
+             f">= {HOTLOOP_SPEEDUP_FLOOR}x floor over the legacy "
+             "two-sweep hot loop")
+    # the fallback ratio hovers near 1.0 by design (the fallback re-reads
+    # the points but does the same arithmetic), so on shared runners it is
+    # soft-gated like every other wall-clock metric (--gate-time hardens)
+    rep.gate(hot.get("speedup_vs_fallback", 0.0) >= HOTLOOP_FALLBACK_FLOOR,
+             "scaling.hotloop.speedup_vs_fallback",
+             f"fused sweep {hot.get('speedup_vs_fallback')}x vs the "
+             "unfused fallback — fusing must not cost",
+             hard=gate_time)
+
+
 def compare_scaling(base, cur, tol: float, rep: Report,
                     gate_time: bool, time_tol: float):
     rep.gate(base.get("quick") == cur.get("quick"), "scaling.config.quick",
              "incommensurable runs (regenerate baselines with the same "
              "--quick setting): " + _fmt(cur.get("quick"),
                                          base.get("quick")))
+    compare_hotloop(base, cur, rep, gate_time)
     cur_rows = {(r["method"], r["devices"]): r for r in cur.get("spmd", [])}
     seen_devices = {r["devices"] for r in cur.get("spmd", [])}
     for d in (1, 2, 4, 8):
