@@ -1,0 +1,70 @@
+"""Paper §5 comparison-matrix experiment harness (CLI wrapper around
+``repro.eval.experiments``): every registered method × the expanded mesh
+zoo, each cell evaluated with the sharded in-graph metrics, emitting
+``BENCH_experiments.json`` for the CI regression + paper-trend gate
+(``tools/bench_compare.py compare_experiments``).
+
+    PYTHONPATH=src python -m benchmarks.experiments [--quick] [--json]
+    PYTHONPATH=src python -m benchmarks.experiments --n 2000 --k 8
+"""
+from __future__ import annotations
+
+from .common import md_table, save_bench_json, save_json
+
+ROW_COLS = ["family", "graph", "tool", "cut", "maxCommVol", "totalCommVol",
+            "boundaryNodes", "imbalance", "time_partition_s", "time_eval_s"]
+
+
+def run(n: int = 20_000, k: int = 32, quick: bool = False,
+        json_out: bool = False, seed: int = 0,
+        eval_devices: int | None = None) -> dict:
+    # imported here so main() can force virtual devices before the first
+    # jax import (repro.eval pulls in jax transitively)
+    from repro.eval.experiments import CELL_METRICS, run_matrix
+    if quick:
+        n, k = 4_000, 16
+    out = run_matrix(n, k, eval_devices=eval_devices, seed=seed,
+                     quick=quick)
+    for r in out["rows"]:
+        print(f"  {r['graph']:18s} {r['tool']:12s} cut={r['cut']:8d} "
+              f"maxCV={r['maxCommVol']:6d} sumCV={r['totalCommVol']:8d} "
+              f"bnd={r['boundaryNodes']:7d} imb={r['imbalance']:.3f} "
+              f"t={r['time_partition_s']:.2f}s "
+              f"eval={r['time_eval_s']:.2f}s@{out['eval_devices']}dev")
+    save_json("experiments", out)
+    if json_out:
+        save_bench_json("experiments", out)
+    print(f"\n### §5 comparison matrix (n={out['n']}, k={out['k']}, "
+          f"eval over {out['eval_devices']} shards)\n")
+    print(md_table(out["rows"], ROW_COLS))
+    print("\n### Paper-trend summary (geographer metric / tool metric, "
+          "geomean over the zoo; < 1 means geographer better)\n")
+    trend_rows = [dict({"tool": tool}, **ratios)
+                  for tool, ratios in out["summary"]["geo_over_tool"].items()]
+    print(md_table(trend_rows, ["tool", *CELL_METRICS]))
+    return out
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI sizes (n=4000, k=16)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit BENCH_experiments.json")
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eval-devices", type=int, default=None,
+                    help="shard count for metric evaluation "
+                         "(default min(4, visible devices))")
+    args = ap.parse_args()
+    # must precede the first jax import (run() imports repro.eval lazily)
+    from repro.envflags import force_virtual_devices
+    force_virtual_devices(8)
+    run(n=args.n, k=args.k, quick=args.quick, json_out=args.json,
+        seed=args.seed, eval_devices=args.eval_devices)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,9 @@ Modules:
   repartition — dynamic repartitioning: warm-started Geographer vs cold
                 restart on a drifting-hotspot workload (iterations,
                 migration volume, per-step balance)
+  experiments — §5 comparison matrix: every registered method × the
+                expanded mesh zoo, sharded in-graph evaluation, with the
+                paper-trend summary (geographer vs sfc/rcb comm volume)
   components  — §5.3.2 component shares + §4.3 bound-skip-rate claim
   moe_router  — paper Eq. (1) as MoE load balancing (framework integration)
   roofline    — §Roofline/§Dry-run aggregation from results/dryrun/*.json
@@ -30,8 +33,8 @@ import argparse
 import time
 import traceback
 
-ALL = ["quality", "scaling", "repartition", "components", "moe_router",
-       "roofline"]
+ALL = ["quality", "scaling", "repartition", "experiments", "components",
+       "moe_router", "roofline"]
 
 
 def _force_virtual_devices() -> None:
@@ -51,7 +54,7 @@ def main() -> None:
     ap.add_argument("--json", action="store_true",
                     help="also emit machine-readable BENCH_<name>.json "
                          "regression files (quality, scaling, "
-                         "repartition)")
+                         "repartition, experiments)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else ALL
     _force_virtual_devices()
@@ -70,6 +73,9 @@ def main() -> None:
             elif name == "repartition":
                 from . import repartition
                 repartition.run(quick=args.quick, json_out=args.json)
+            elif name == "experiments":
+                from . import experiments
+                experiments.run(quick=args.quick, json_out=args.json)
             elif name == "components":
                 from . import components
                 components.run(quick=args.quick)

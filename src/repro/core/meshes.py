@@ -159,10 +159,9 @@ def knn_mesh(pts: np.ndarray, k: int = 6, name: str = "knn") -> Mesh:
     order = np.lexsort((dd, r))
     r, c, dd = r[order], c[order], dd[order]
     starts = np.searchsorted(r, np.arange(n + 1))
-    keep = np.zeros(len(r), dtype=bool)
-    for i in range(n):
-        s, t = starts[i], starts[i + 1]
-        keep[s:min(t, s + k)] = True
+    # rank of each candidate within its (distance-sorted) row; keep the k
+    # nearest — vectorized, identical to slicing each row's first k
+    keep = (np.arange(len(r)) - starts[r]) < k
     indptr, indices = _dedup_sym_edges(n, r[keep], c[keep])
     return Mesh(pts, indptr, indices, name=name)
 
@@ -185,6 +184,35 @@ def refined_mesh(n: int, seed: int = 0, dim: int = 2) -> Mesh:
     bulk = rng.uniform(0, 1, (n - n_feat, dim))
     pts = np.concatenate([feat, bulk], axis=0)
     return knn_mesh(pts, k=6, name=f"refined{n}_{dim}d")
+
+
+def stretched_grid(n: int, aspect: float = 6.0, jitter: float = 0.2,
+                   seed: int = 0) -> Mesh:
+    """Anisotropic stretched grid: a square triangulated grid whose x
+    coordinates are scaled by ``aspect`` — isotropic topology, strongly
+    anisotropic geometry. The stress case for geometric partitioners:
+    compact-in-space blocks are elongated-in-graph, so axis-aligned cuts
+    (RCB/MJ) and locality-preserving curves behave very differently here
+    than on isotropic meshes."""
+    side = max(int(np.sqrt(n)), 2)
+    base = grid_triangulation(side, side, jitter=jitter, seed=seed)
+    pts = base.points * np.array([aspect, 1.0])
+    return Mesh(pts, base.indptr, base.indices,
+                name=f"aniso{side * side}_a{aspect:g}")
+
+
+def powerlaw_rgg(n: int, dim: int = 2, alpha: float = 2.0,
+                 w_cap: float = 100.0, seed: int = 0) -> Mesh:
+    """Random geometric graph with power-law node weights: Pareto(alpha)
+    draws (clipped at ``w_cap`` so no single node exceeds a feasible block
+    share) model particle-in-cell / n-body loads where a few cells carry
+    most of the work. Weighted comm-volume balance is the §5 regime the
+    2.5D climate mesh probes gently; this one probes it hard."""
+    mesh = random_geometric_graph(n, dim, seed=seed)
+    rng = np.random.default_rng(seed + 0x9E37)
+    mesh.weights = np.minimum(rng.pareto(alpha, n) + 1.0, w_cap)
+    mesh.name = f"rggpow{n}_{dim}d"
+    return mesh
 
 
 def climate_mesh_25d(n: int, seed: int = 0) -> Mesh:
@@ -296,5 +324,8 @@ REGISTRY = {
     "delaunay2d": lambda n, seed=0: knn_mesh(np.random.default_rng(seed).uniform(0, 1, (n, 2)), 6, f"delaunay{n}_2d"),
     "delaunay3d": lambda n, seed=0: knn_mesh(np.random.default_rng(seed).uniform(0, 1, (n, 3)), 6, f"delaunay{n}_3d"),
     "refined2d": lambda n, seed=0: refined_mesh(n, seed, 2),
+    "refined3d": lambda n, seed=0: refined_mesh(n, seed, 3),
+    "aniso": lambda n, seed=0: stretched_grid(n, seed=seed),
+    "rggpow": lambda n, seed=0: powerlaw_rgg(n, 2, seed=seed),
     "climate25d": lambda n, seed=0: climate_mesh_25d(n, seed),
 }

@@ -5,6 +5,8 @@ dynamic repartitioning (DESIGN.md §8).
 * comm volume       — per block V_i: sum over v in V_i of the number of
                       *other* blocks containing a neighbor of v; we report
                       max and total over blocks (maxCommVol / sum CommVol)
+* boundary nodes    — #vertices with at least one neighbor in another
+                      block (the halo senders; comm volume counts copies)
 * imbalance         — max block weight / (total/k) - 1 (same target for
                       unit and weighted inputs, matching the solvers)
 * diameter          — per-block graph diameter lower bound via a few rounds
@@ -108,22 +110,51 @@ def edge_cut(part: np.ndarray, indptr: np.ndarray, indices: np.ndarray) -> int:
     return int((part[src] != part[indices]).sum() // 2)
 
 
+def _distinct_remote_pairs(part: np.ndarray, indptr: np.ndarray,
+                           indices: np.ndarray) -> tuple[np.ndarray, int]:
+    """Distinct (vertex, remote block) adjacency pairs, vectorized.
+
+    Unique-per-row formulation: expand the CSR rows to a directed edge
+    list, keep the cut edges, lexsort by (vertex, neighbor block) and drop
+    adjacent duplicates — no per-node Python loop and no ``v * k + block``
+    key that could overflow. Returns ``(v, n_pairs)`` where ``v`` holds
+    the source vertex of each distinct pair (``comm_volume`` bins them by
+    block; ``boundary_nodes`` only needs which vertices appear)."""
+    n = len(indptr) - 1
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    nb_block = part[indices]
+    remote = nb_block != part[src]
+    v, b = src[remote], nb_block[remote]
+    order = np.lexsort((b, v))
+    v, b = v[order], b[order]
+    first = np.ones(v.shape[0], dtype=bool)
+    first[1:] = (v[1:] != v[:-1]) | (b[1:] != b[:-1])
+    return v[first], int(first.sum())
+
+
 def comm_volume(part: np.ndarray, indptr: np.ndarray, indices: np.ndarray,
                 k: int) -> tuple[int, int, np.ndarray]:
     """Returns (max_comm, total_comm, per_block_comm).
 
     comm(V_i) = sum_{v in V_i} #{distinct blocks j != part(v) adjacent to v}.
     """
-    n = len(indptr) - 1
-    src = np.repeat(np.arange(n), np.diff(indptr))
-    nb_block = part[indices]
-    # distinct (v, remote block) pairs
-    remote = nb_block != part[src]
-    key = src[remote].astype(np.int64) * np.int64(k) + nb_block[remote]
-    uniq = np.unique(key)
-    v = (uniq // k).astype(np.int64)
+    v, _ = _distinct_remote_pairs(part, indptr, indices)
     per_block = np.bincount(part[v], minlength=k)
     return int(per_block.max(initial=0)), int(per_block.sum()), per_block
+
+
+def boundary_nodes(part: np.ndarray, indptr: np.ndarray, indices: np.ndarray,
+                   k: int) -> tuple[int, np.ndarray]:
+    """Returns (total, per_block) boundary-vertex counts.
+
+    A vertex is a boundary node when at least one neighbor lives in a
+    different block — exactly the vertices whose data a parallel solver
+    ships every halo exchange (the comm volume counts how many *copies*
+    go out; this counts the senders)."""
+    v, _ = _distinct_remote_pairs(part, indptr, indices)
+    boundary = np.unique(v)
+    per_block = np.bincount(part[boundary], minlength=k)
+    return int(per_block.sum()), per_block
 
 
 def _bfs_ecc(indptr: np.ndarray, indices: np.ndarray, sub: np.ndarray,
@@ -200,11 +231,14 @@ def evaluate_problem(problem, labels: np.ndarray,
         "n_blocks_used": int(len(np.unique(labels))),
     }
     if getattr(problem, "indptr", None) is not None:
-        maxc, totc, _ = comm_volume(labels, problem.indptr, problem.indices,
-                                    problem.k)
+        # one O(m log m) distinct-pair pass feeds both volume metrics
+        v, _ = _distinct_remote_pairs(labels, problem.indptr,
+                                      problem.indices)
+        per_block = np.bincount(labels[v], minlength=problem.k)
         out["cut"] = edge_cut(labels, problem.indptr, problem.indices)
-        out["maxCommVol"] = maxc
-        out["totalCommVol"] = totc
+        out["maxCommVol"] = int(per_block.max(initial=0))
+        out["totalCommVol"] = int(per_block.sum())
+        out["boundaryNodes"] = int(np.unique(v).size)
         if with_diameter:
             d = block_diameters(labels, problem.indptr, problem.indices,
                                 problem.k)

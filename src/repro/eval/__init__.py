@@ -1,0 +1,22 @@
+"""Distributed evaluation subsystem (DESIGN.md §9).
+
+In-graph sharded quality metrics — the evaluation-layer counterpart of
+the sharded solver path — plus the paper-style experiment harness that
+reproduces the §5 method-vs-method comparison matrix:
+
+    from repro.eval import ShardedGraph, evaluate_sharded
+
+    prob = PartitionProblem.from_mesh(mesh, k=64)
+    res = partition(prob, devices=8)
+    evaluate_sharded(prob, res.labels, devices=8)   # == res.evaluate()
+
+    from repro.eval.experiments import run_matrix   # §5 tables analogue
+"""
+from .sharded import (ShardedGraph, boundary_nodes_sharded,
+                      comm_volume_sharded, edge_cut_sharded,
+                      evaluate_sharded)
+
+__all__ = [
+    "ShardedGraph", "edge_cut_sharded", "comm_volume_sharded",
+    "boundary_nodes_sharded", "evaluate_sharded",
+]

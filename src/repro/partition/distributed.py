@@ -137,6 +137,22 @@ class ShardedPartitionProblem:
         return cls(problem=problem, devices=P, points=pts, weights=weights,
                    gather=gather, valid=valid)
 
+    def deal(self, values: np.ndarray) -> np.ndarray:
+        """Deal a per-point host array onto the shard layout.
+
+        The inverse direction of ``scatter_labels``: original-point-order
+        values land at their round-robin slot (padded slots replicate the
+        aliased real point's value, consistent with the coordinate
+        padding).
+
+        Args:
+            values: [n, ...] array in original point order.
+
+        Returns:
+            [P, cap, ...] dealt array.
+        """
+        return np.asarray(values)[self.gather]
+
     def scatter_labels(self, A: np.ndarray) -> np.ndarray:
         """Scatter shard labels back home.
 
@@ -297,7 +313,7 @@ def geographer_repartition_sharded(problem: PartitionProblem, devices: int,
     infl0 = (jnp.ones(cfg.k, cfg.dtype) if influence0 is None
              else jnp.asarray(influence0, cfg.dtype))
     prev = (np.zeros((sp.devices, sp.cap), np.int32) if prev_labels is None
-            else np.asarray(prev_labels, np.int32)[sp.gather])
+            else sp.deal(np.asarray(prev_labels, np.int32)))
     if prev_labels is None:
         # no previous labels -> disable no-op detection by making the
         # dummy never match a real assignment

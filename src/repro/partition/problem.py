@@ -113,6 +113,14 @@ class PartitionProblem:
         from .distributed import ShardedPartitionProblem
         return ShardedPartitionProblem.from_problem(self, devices)
 
+    def to_sharded_graph(self, devices: int):
+        """Sharded CSR companion view for the distributed evaluation
+        subsystem: the graph's rows dealt onto the same seed-permuted
+        round-robin layout as ``to_sharded`` (see repro.eval.sharded).
+        Requires the problem to carry a CSR adjacency."""
+        from repro.eval.sharded import ShardedGraph
+        return ShardedGraph.from_problem(self, devices)
+
 
 @dataclass
 class PartitionResult:
@@ -152,25 +160,41 @@ class PartitionResult:
         w = None if self.problem is None else self.problem.weights
         return metrics.block_sizes(np.asarray(self.labels), self.k, w)
 
-    def evaluate(self, with_diameter: bool = False) -> dict:
+    def evaluate(self, with_diameter: bool = False,
+                 devices: int | None = None) -> dict:
         """Compute (and cache at ``self.quality``) the paper's quality
         metric set.
 
         Args:
             with_diameter: also compute per-block diameter bounds (BFS —
-                noticeably slower on large meshes).
+                noticeably slower on large meshes; host path only).
+            devices: compute the graph metrics in-graph over P shards
+                (``repro.eval.evaluate_sharded`` — bit-for-bit equal to
+                the host metrics, scales with the solver layer). None
+                keeps the host numpy path.
 
         Returns:
             dict with ``imbalance`` / ``n_blocks_used`` always, plus
-            ``cut`` / ``maxCommVol`` / ``totalCommVol`` (and diameter
-            stats) when the problem carries a CSR graph.
+            ``cut`` / ``maxCommVol`` / ``totalCommVol`` /
+            ``boundaryNodes`` (and diameter stats) when the problem
+            carries a CSR graph.
 
         Raises:
-            ValueError: the result has no problem attached.
+            ValueError: the result has no problem attached, or
+                ``devices`` is combined with ``with_diameter``.
         """
         from repro.core import metrics
         if self.problem is None:
             raise ValueError("result has no problem attached")
+        if devices is not None:
+            if with_diameter:
+                raise ValueError("with_diameter has no sharded path; "
+                                 "call evaluate(with_diameter=True) "
+                                 "without devices=")
+            from repro.eval import evaluate_sharded
+            self.quality = evaluate_sharded(
+                self.problem, np.asarray(self.labels), devices)
+            return self.quality
         self.quality = metrics.evaluate_problem(
             self.problem, np.asarray(self.labels),
             with_diameter=with_diameter)

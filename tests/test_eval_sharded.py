@@ -1,0 +1,160 @@
+"""Distributed evaluation subsystem (repro.eval): ShardedGraph layout
+invariants, exact sharded-vs-host metric agreement, and the engine
+plumbing (``PartitionResult.evaluate(devices=P)``).
+
+The property-based randomized sweep lives in
+tests/test_metrics_properties.py (tier2); this module is the fast tier-1
+coverage of the same contracts on fixed instances.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import meshes, metrics
+from repro.eval import (ShardedGraph, boundary_nodes_sharded,
+                        comm_volume_sharded, edge_cut_sharded,
+                        evaluate_sharded)
+from repro.partition import PartitionProblem, partition
+
+needs8 = pytest.mark.skipif(len(jax.devices()) < 8,
+                            reason="needs 8 (virtual) jax devices")
+
+
+@pytest.fixture(scope="module")
+def problem():
+    mesh = meshes.REGISTRY["delaunay2d"](1603, seed=0)   # P does not divide n
+    return PartitionProblem.from_mesh(mesh, k=7, epsilon=0.03)
+
+
+@pytest.fixture(scope="module")
+def labels(problem):
+    return partition(problem, method="rcb").labels
+
+
+def test_sharded_graph_layout(problem):
+    """Every directed CSR edge appears exactly once, on its source's
+    shard, with the source's local slot index."""
+    sg = ShardedGraph.from_problem(problem, 4)
+    deg = np.diff(problem.indptr)
+    assert sg.ecap >= 1
+    assert int(sg.edge_valid.sum()) == len(problem.indices)
+    sp = sg.sharded
+    for p in range(4):
+        ev = sg.edge_valid[p]
+        # each shard's edge count == sum of its valid slots' degrees
+        slots = np.nonzero(sp.valid[p])[0]
+        assert int(ev.sum()) == int(deg[sp.gather[p][slots]].sum())
+        # sources are valid local slots; targets are the CSR neighbors
+        src_global = sp.gather[p][sg.src[p][ev]]
+        for g, d in zip(*np.unique(src_global, return_counts=True)):
+            assert d == deg[g]
+    # reconstructed directed edge multiset == the CSR edge multiset
+    all_src, all_dst = [], []
+    for p in range(4):
+        ev = sg.edge_valid[p]
+        all_src.append(sp.gather[p][sg.src[p][ev]])
+        all_dst.append(sg.dst[p][ev])
+    got = sorted(zip(np.concatenate(all_src).tolist(),
+                     np.concatenate(all_dst).tolist()))
+    n = problem.n
+    want = sorted(zip(np.repeat(np.arange(n), deg).tolist(),
+                      problem.indices.tolist()))
+    assert got == want
+
+
+@needs8
+@pytest.mark.parametrize("devices", [1, 2, 4, 8])
+def test_sharded_metrics_exact(problem, labels, devices):
+    """Integer counts psum in any order exactly: the sharded metrics are
+    bit-for-bit equal to the numpy metrics at EVERY device count."""
+    sg = ShardedGraph.from_problem(problem, devices)
+    assert edge_cut_sharded(sg, labels) == metrics.edge_cut(
+        labels, problem.indptr, problem.indices)
+    hmax, htot, hpb = metrics.comm_volume(labels, problem.indptr,
+                                          problem.indices, problem.k)
+    smax, stot, spb = comm_volume_sharded(sg, labels)
+    assert (smax, stot) == (hmax, htot)
+    np.testing.assert_array_equal(spb, hpb)
+    htotal, hper = metrics.boundary_nodes(labels, problem.indptr,
+                                          problem.indices, problem.k)
+    stotal, sper = boundary_nodes_sharded(sg, labels)
+    assert stotal == htotal
+    np.testing.assert_array_equal(sper, hper)
+
+
+@needs8
+def test_evaluate_sharded_matches_host_dict(problem, labels):
+    host = metrics.evaluate_problem(problem, labels)
+    assert evaluate_sharded(problem, labels, devices=4) == host
+
+
+@needs8
+def test_result_evaluate_devices_path(problem):
+    res = partition(problem, method="geographer")
+    host = dict(res.evaluate())
+    assert res.evaluate(devices=2) == host
+    assert res.quality == host                       # cache refreshed
+    with pytest.raises(ValueError, match="diameter"):
+        res.evaluate(with_diameter=True, devices=2)
+
+
+@needs8
+def test_weighted_mesh_sharded_eval():
+    mesh = meshes.REGISTRY["rggpow"](901, seed=3)
+    prob = PartitionProblem.from_mesh(mesh, k=5, epsilon=0.05)
+    res = partition(prob, method="sfc")
+    assert evaluate_sharded(prob, res.labels, devices=8) == res.evaluate()
+
+
+def test_graph_required():
+    pts = np.random.default_rng(0).uniform(0, 1, (64, 2))
+    prob = PartitionProblem(points=pts, k=4)
+    with pytest.raises(ValueError, match="CSR"):
+        ShardedGraph.from_problem(prob, 2)
+    with pytest.raises(ValueError, match="CSR"):
+        prob.to_sharded_graph(2)
+
+
+def test_label_shape_checked(problem):
+    sg = problem.to_sharded_graph(2)
+    with pytest.raises(ValueError, match="labels"):
+        edge_cut_sharded(sg, np.zeros(problem.n - 1, np.int64))
+
+
+def test_graph_problem_mismatch_rejected(problem):
+    sg = problem.to_sharded_graph(2)
+    other = PartitionProblem.from_mesh(
+        meshes.REGISTRY["tri"](400, seed=0), k=4)
+    with pytest.raises(ValueError, match="different problem"):
+        evaluate_sharded(other, np.zeros(other.n, np.int64), 2, graph=sg)
+    with pytest.raises(ValueError, match="different problem"):
+        evaluate_sharded(problem, np.zeros(problem.n, np.int64), 4,
+                         graph=sg)                   # devices mismatch
+
+
+@needs8
+def test_memo_invalidates_on_new_labels(problem):
+    """The per-graph (labels, result) memo must never serve stale results
+    when a different labeling is evaluated on the same graph."""
+    sg = problem.to_sharded_graph(2)
+    a = np.zeros(problem.n, np.int64)
+    b = (np.arange(problem.n) % problem.k).astype(np.int64)
+    assert edge_cut_sharded(sg, a) == 0
+    cut_b = edge_cut_sharded(sg, b)
+    assert cut_b == metrics.edge_cut(b, problem.indptr, problem.indices)
+    assert cut_b > 0
+    assert edge_cut_sharded(sg, a) == 0              # back again
+    # memoized repeat returns the identical result object
+    assert comm_volume_sharded(sg, a) == comm_volume_sharded(sg, a)
+
+
+def test_deal_scatter_roundtrip(problem):
+    """deal() is the inverse direction of scatter_labels on valid slots."""
+    sp = problem.to_sharded(4)
+    vals = np.arange(problem.n, dtype=np.int64)
+    dealt = sp.deal(vals)
+    assert dealt.shape == (4, sp.cap)
+    np.testing.assert_array_equal(sp.scatter_labels(dealt), vals)
+    # padded slots replicate their aliased real point's value
+    np.testing.assert_array_equal(dealt[~sp.valid],
+                                  vals[sp.gather[~sp.valid]])

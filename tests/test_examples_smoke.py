@@ -1,10 +1,16 @@
 """Every example must run its --quick mode to completion (exit 0) — the
-docs point users at these entry points, so they can't be allowed to rot."""
+docs point users at these entry points, so they can't be allowed to rot.
+
+Subprocess smokes are the slow-harness class of test: the default run
+(`pytest -x -q`, the tier-1 gate) still executes them, but CI moves them
+to the tier2 job (see pytest.ini)."""
 import os
 import subprocess
 import sys
 
 import pytest
+
+pytestmark = pytest.mark.tier2
 
 REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), os.pardir))
 

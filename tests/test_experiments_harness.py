@@ -1,0 +1,199 @@
+"""Experiment harness coverage: the §5 method × mesh-zoo matrix runs at
+toy sizes, the emitted ``BENCH_experiments.json`` obeys its schema, and
+the ``compare_experiments`` gate accepts a self-compare / rejects a
+planted regression."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), os.pardir))
+
+ROW_INT_METRICS = ("cut", "maxCommVol", "totalCommVol", "boundaryNodes",
+                   "n_blocks_used")
+ROW_KEYS = set(ROW_INT_METRICS) | {
+    "family", "graph", "tool", "n", "k", "imbalance", "balanced",
+    "time_partition_s", "time_eval_s"}
+
+
+def validate_schema(out: dict) -> None:
+    """Assert the BENCH_experiments.json contract the CI gate relies on."""
+    for key in ("schema", "quick", "n", "k", "epsilon", "seed",
+                "eval_devices", "families", "methods", "rows", "summary"):
+        assert key in out, f"missing top-level key {key!r}"
+    assert out["schema"] == 1
+    families, methods = out["families"], out["methods"]
+    assert len(out["rows"]) == len(families) * len(methods)
+    seen = set()
+    for r in out["rows"]:
+        assert ROW_KEYS <= set(r), ROW_KEYS - set(r)
+        assert r["family"] in families and r["tool"] in methods
+        seen.add((r["family"], r["tool"]))
+        for met in ROW_INT_METRICS:
+            assert int(r[met]) >= 0
+        assert r["totalCommVol"] >= r["maxCommVol"]
+        assert r["imbalance"] >= 0.0
+    assert len(seen) == len(out["rows"]), "duplicate (family, tool) cell"
+    trend = out["summary"]["geo_over_tool"]
+    assert set(trend) == set(methods) - {"geographer"}
+    for ratios in trend.values():
+        assert {"cut", "maxCommVol", "totalCommVol"} <= set(ratios)
+        assert all(v > 0 for v in ratios.values())
+    assert isinstance(out["summary"]["geographer_all_balanced"], bool)
+
+
+@pytest.fixture(scope="module")
+def toy_matrix():
+    from repro.eval.experiments import run_matrix
+    return run_matrix(n=400, k=4, eval_devices=2, seed=0)
+
+
+def test_full_matrix_toy_sizes(toy_matrix):
+    """Every registered method × every zoo family actually produces a
+    cell (coverage is what the CI gate diffs against)."""
+    from repro.eval.experiments import (EXPERIMENT_FAMILIES,
+                                        experiment_methods)
+    validate_schema(toy_matrix)
+    assert set(toy_matrix["families"]) == set(EXPERIMENT_FAMILIES)
+    assert set(toy_matrix["methods"]) == set(experiment_methods())
+    assert {"geographer", "sfc", "rcb", "rib", "multijagged",
+            "hierarchical"} <= set(toy_matrix["methods"])
+
+
+def test_matrix_metrics_match_host_evaluation(toy_matrix):
+    """Harness rows must equal an independent host-side re-evaluation —
+    the sharded evaluator cannot drift from core.metrics unnoticed."""
+    from repro.core import meshes, metrics
+    from repro.eval.experiments import EXPERIMENT_FAMILIES
+    from repro.partition import PartitionProblem
+
+    row = next(r for r in toy_matrix["rows"]
+               if r["tool"] == "rcb" and r["family"] == "tri")
+    mesh = meshes.REGISTRY["tri"](
+        int(400 * EXPERIMENT_FAMILIES["tri"]), seed=0)
+    prob = PartitionProblem.from_mesh(mesh, 4, seed=0)
+    from repro.partition import partition
+    labels = partition(prob, method="rcb").labels
+    host = metrics.evaluate_problem(prob, labels)
+    for met in ("cut", "maxCommVol", "totalCommVol", "boundaryNodes"):
+        assert row[met] == host[met]
+
+
+@pytest.mark.tier2
+def test_cli_quick_smoke_and_schema(tmp_path):
+    """`python -m benchmarks.experiments --json` end to end (exit 0, file
+    lands where REPRO_BENCH_JSON_DIR points, schema holds)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env["REPRO_BENCH_JSON_DIR"] = str(tmp_path)
+    env["REPRO_BENCH_DIR"] = str(tmp_path / "results")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.experiments",
+         "--n", "400", "--k", "4", "--json"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"experiments CLI failed (exit {proc.returncode})\n"
+        f"--- stdout ---\n{proc.stdout[-2000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-2000:]}")
+    path = tmp_path / "BENCH_experiments.json"
+    assert path.exists()
+    out = json.loads(path.read_text())
+    validate_schema(out)
+    assert out["n"] == 400 and out["k"] == 4 and out["quick"] is False
+
+
+def _run_gate(baseline_dir, current_dir):
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "bench_compare.py"),
+         "--baseline", str(baseline_dir), "--current", str(current_dir),
+         "--files", "BENCH_experiments.json"],
+        capture_output=True, text=True, timeout=120)
+
+
+@pytest.fixture(scope="module")
+def gate_dirs(toy_matrix, tmp_path_factory):
+    base = tmp_path_factory.mktemp("baseline")
+    cur = tmp_path_factory.mktemp("current")
+    doc = json.loads(json.dumps(toy_matrix, default=float))
+    # pin the trend summary to CI-config-like values: the absolute trend
+    # floor is calibrated for the quick config (n=4000, ~15% margin), not
+    # for this n=400 toy matrix, and it has its own rejection test below
+    for tool in ("sfc", "rcb"):
+        doc["summary"]["geo_over_tool"][tool]["totalCommVol"] = 0.85
+    blob = json.dumps(doc)
+    (base / "BENCH_experiments.json").write_text(blob)
+    (cur / "BENCH_experiments.json").write_text(blob)
+    return base, cur
+
+
+def test_gate_accepts_self_compare(gate_dirs):
+    base, cur = gate_dirs
+    proc = _run_gate(base, cur)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_gate_rejects_commvol_regression(gate_dirs, tmp_path):
+    """A 2x comm-volume blowup in one cell must fail the gate."""
+    base, _ = gate_dirs
+    bad = json.loads((base / "BENCH_experiments.json").read_text())
+    row = next(r for r in bad["rows"] if r["tool"] == "geographer")
+    row["totalCommVol"] = int(row["totalCommVol"] * 2 + 100)
+    (tmp_path / "BENCH_experiments.json").write_text(
+        json.dumps(bad, default=float))
+    proc = _run_gate(base, tmp_path)
+    assert proc.returncode == 1
+    assert "totalCommVol" in proc.stdout
+
+
+def test_gate_rejects_missing_cell(gate_dirs, tmp_path):
+    """Dropping a (family, tool) cell is a coverage regression."""
+    base, _ = gate_dirs
+    bad = json.loads((base / "BENCH_experiments.json").read_text())
+    bad["rows"] = bad["rows"][:-1]
+    (tmp_path / "BENCH_experiments.json").write_text(
+        json.dumps(bad, default=float))
+    proc = _run_gate(base, tmp_path)
+    assert proc.returncode == 1
+    assert "coverage" in proc.stdout or "missing" in proc.stdout
+
+
+def test_gate_rejects_broken_trend(gate_dirs, tmp_path):
+    """If geographer's comm volume stops beating sfc's (geomean ratio
+    above 1.0) the paper-trend claim is gone and CI must say so."""
+    base, _ = gate_dirs
+    bad = json.loads((base / "BENCH_experiments.json").read_text())
+    bad["summary"]["geo_over_tool"]["sfc"]["totalCommVol"] = 1.2
+    (tmp_path / "BENCH_experiments.json").write_text(
+        json.dumps(bad, default=float))
+    proc = _run_gate(base, tmp_path)
+    assert proc.returncode == 1
+    assert "trend" in proc.stdout
+
+
+def test_gate_files_selector_unknown_file(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "bench_compare.py"),
+         "--baseline", str(tmp_path), "--current", str(tmp_path),
+         "--files", "BENCH_nonexistent.json"],
+        capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 2
+
+
+def test_deterministic_rows_given_seed():
+    """Same (n, k, seed) => identical metric cells (timings aside) —
+    the property that makes the checked-in baseline meaningful."""
+    from repro.eval.experiments import run_matrix
+    a = run_matrix(n=300, k=3, families=["tri"], methods=["rcb", "sfc"],
+                   eval_devices=2, seed=5)
+    b = run_matrix(n=300, k=3, families=["tri"], methods=["rcb", "sfc"],
+                   eval_devices=2, seed=5)
+    for ra, rb in zip(a["rows"], b["rows"]):
+        for met in ROW_INT_METRICS + ("imbalance",):
+            assert ra[met] == rb[met]
+    assert np.isclose(
+        a["summary"]["geo_over_tool"]["sfc"].get("cut", 0.0),
+        b["summary"]["geo_over_tool"]["sfc"].get("cut", 0.0))

@@ -126,7 +126,8 @@ def test_baselines_weighted(name):
 
 
 def test_mesh_generators():
-    for key in ["tri", "rgg2d", "delaunay2d", "refined2d", "climate25d"]:
+    for key in ["tri", "rgg2d", "delaunay2d", "refined2d", "climate25d",
+                "aniso", "rggpow"]:
         m = meshes.REGISTRY[key](2500)
         assert m.n >= 2400
         assert m.indices.max() < m.n
@@ -136,8 +137,21 @@ def test_mesh_generators():
         src = np.repeat(np.arange(m.n), deg)
         fwd = set(zip(src.tolist(), m.indices.tolist()))
         assert all((b, a) in fwd for a, b in list(fwd)[:200])
-    m = meshes.REGISTRY["rgg3d"](2000)
-    assert m.dim == 3
+    for key in ["rgg3d", "refined3d"]:
+        m = meshes.REGISTRY[key](2000)
+        assert m.dim == 3
+        assert m.n >= 1900
+
+
+def test_new_zoo_families_stress_properties():
+    """The expanded §5 zoo keeps its defining traits: aniso stretches x by
+    the aspect factor, rggpow draws heavy-tailed (but capped) weights."""
+    a = meshes.stretched_grid(1600, aspect=6.0, seed=0)
+    ext = a.points.max(axis=0) - a.points.min(axis=0)
+    assert ext[0] / ext[1] == pytest.approx(6.0, rel=0.05)
+    w = meshes.powerlaw_rgg(3000, seed=0).weights
+    assert w is not None and np.all(w >= 1.0) and np.all(w <= 100.0)
+    assert w.max() / np.median(w) > 5.0      # genuinely heavy-tailed
 
 
 def test_rcb_powers_of_two_and_odd_k():

@@ -27,6 +27,11 @@ baselines and exits non-zero on a regression:
   (``iters_ratio >= 3``, ``migration_ratio <= 0.30``, every step of both
   runs balanced), and the warm run's mean iterations / mean migration
   fraction must not regress by more than ``--tolerance`` vs baseline.
+* experiments (the §5 comparison matrix): full method x mesh-zoo cell
+  coverage, per-cell ``cut`` / ``totalCommVol`` / ``imbalance``
+  regression vs baseline, every geographer cell balanced, and the
+  paper-trend floor — geographer's comm-volume geomean over the zoo
+  must stay <= sfc's and rcb's (ratio <= 1.0, absolute).
 * wall-clock metrics are reported but only gated with ``--gate-time``
   (shared CI runners are noisy); the time gate multiplier is
   ``--time-tolerance`` (default 100%).
@@ -172,6 +177,48 @@ def compare_scaling(base, cur, tol: float, rep: Report,
                  hard=gate_time)
 
 
+# §5 paper trend: geographer's comm volume must stay <= the Zoltan-style
+# geometric baselines', geomean over the mesh zoo (measured ~0.79 vs sfc
+# and ~0.86 vs rcb at the quick config — 1.0 is an absolute claim floor,
+# not a noise envelope)
+TREND_TOOLS = ("sfc", "rcb")
+TREND_RATIO_CEIL = 1.0
+
+
+def compare_experiments(base, cur, tol: float, rep: Report):
+    for fld in ("n", "k", "quick", "eval_devices", "seed"):
+        rep.gate(base.get(fld) == cur.get(fld),
+                 f"experiments.config.{fld}",
+                 "incommensurable runs (regenerate baselines with the "
+                 "same --quick setting): " + _fmt(cur.get(fld),
+                                                  base.get(fld)))
+    cur_rows = {(r["family"], r["tool"]): r for r in cur.get("rows", [])}
+    for b in base.get("rows", []):
+        key = (b["family"], b["tool"])
+        where = f"experiments[{b['family']}/{b['tool']}]"
+        c = cur_rows.get(key)
+        if c is None:
+            rep.add(FAIL, where, "cell missing from current run "
+                                 "(method x mesh coverage regression)")
+            continue
+        for met, slack in (("cut", 2.0), ("totalCommVol", 2.0),
+                           ("imbalance", 0.01)):
+            rep.gate(not _regressed(c.get(met), b.get(met), tol, slack),
+                     f"{where}.{met}", _fmt(c.get(met), b.get(met)))
+    s = cur.get("summary", {})
+    rep.gate(bool(s.get("geographer_all_balanced", False)),
+             "experiments.geographer.balanced",
+             "a geographer cell exceeded epsilon (see rows[].imbalance)")
+    # the paper's headline trend, gated absolutely
+    geo = s.get("geo_over_tool", {})
+    for tool in TREND_TOOLS:
+        ratio = geo.get(tool, {}).get("totalCommVol")
+        rep.gate(ratio is not None and ratio <= TREND_RATIO_CEIL,
+                 f"experiments.trend.{tool}",
+                 f"geographer/{tool} comm-volume geomean {ratio} above "
+                 f"the <= {TREND_RATIO_CEIL} paper-trend ceiling")
+
+
 ITERS_RATIO_FLOOR = 3.0        # warm needs >= 3x fewer iterations
 MIGRATION_RATIO_CEIL = 0.30    # warm moves <= 30% of cold's weight
 
@@ -222,6 +269,8 @@ COMPARATORS = {
                                            a.gate_time, a.time_tolerance),
     "BENCH_repartition.json":
         lambda b, c, a, r: compare_repartition(b, c, a.tolerance, r),
+    "BENCH_experiments.json":
+        lambda b, c, a, r: compare_experiments(b, c, a.tolerance, r),
 }
 
 
@@ -239,9 +288,23 @@ def main(argv=None) -> int:
     ap.add_argument("--time-tolerance", type=float, default=1.0,
                     help="allowed relative wall-clock regression "
                          "(default 1.0 = 2x)")
+    ap.add_argument("--files", default=None,
+                    help="comma-separated BENCH_*.json basenames to "
+                         "compare (default: every baseline present) — "
+                         "lets a CI job gate one file, e.g. "
+                         "--files BENCH_experiments.json")
     args = ap.parse_args(argv)
 
     baselines = sorted(glob.glob(os.path.join(args.baseline, "BENCH_*.json")))
+    if args.files:
+        wanted = {f.strip() for f in args.files.split(",") if f.strip()}
+        missing = wanted - {os.path.basename(b) for b in baselines}
+        if missing:
+            print(f"error: no baseline for {sorted(missing)} under "
+                  f"{args.baseline!r}", file=sys.stderr)
+            return 2
+        baselines = [b for b in baselines
+                     if os.path.basename(b) in wanted]
     if not baselines:
         print(f"error: no BENCH_*.json baselines under {args.baseline!r}",
               file=sys.stderr)
