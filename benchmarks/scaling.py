@@ -19,12 +19,18 @@ map to what is measurable here:
   hierarchical ``partition(hierarchy=(k1, k2))``.
 * hot loop — one movement-iteration sweep (assignment + per-cluster
   moment reductions) at n=2^20: the fused assign+reduce backend mode vs
-  the unfused fallback (assignment, then a separate ``segment_moments``
-  sweep — bit-for-bit identical results) vs the legacy pre-fusion hot
-  loop (scatter-masked second-best + three global ``segment_sum``
-  passes, the shape this engine shipped with). Gated by
-  ``tools/bench_compare.py``: fused must be >= 1.3x over legacy,
-  must not lose to the fallback, and must stay bit-exact.
+  the PR 4 fixed-chunk fused baseline, the unfused fallback (assignment,
+  then a separate ``segment_moments`` sweep — bit-for-bit identical
+  results) and the legacy pre-fusion hot loop (scatter-masked second-best
+  + three global ``segment_sum`` passes, the shape this engine shipped
+  with). Gated by ``tools/bench_compare.py``: fused must be >= 1.3x over
+  legacy and >= 1.1x over the PR 4 fused baseline, must not lose to the
+  fallback, and must stay bit-exact.
+* roofline — analytic FLOPs/bytes/arithmetic-intensity of the hot-loop
+  sweep (launch/kernel_roofline.py) against per-platform peaks, with the
+  measured fused median folded in as achieved utilization; gated by
+  ``compare_roofline`` (structure hard, utilization regression with
+  ``--gate-time``).
 """
 from __future__ import annotations
 
@@ -139,16 +145,28 @@ def strong_scaling(n: int = 60_000, ks=(4, 8, 16, 32, 64, 128),
 
 def hotloop(n: int = HOTLOOP_N, k: int = HOTLOOP_K, d: int = 2,
             reps: int = 5, quick: bool = False):
-    """The paper's hot loop (one movement-iteration sweep) three ways.
+    """The paper's hot loop (one movement-iteration sweep) four ways.
 
-    * ``fused``    — backend ``return_moments=True``: assignment + moments
-      in ONE pass over the points (the engine default).
-    * ``fallback`` — the shipped unfused path for backends without moment
+    * ``fused``     — backend ``return_moments=True``: assignment +
+      moments in ONE pass over the points (the engine default: adaptive
+      ``default_chunk`` keeps the [chunk, k] scratch cache-resident and
+      the argmin-free epilogue keeps every reduction vectorized).
+    * ``fused_pr4`` — the PR 4 fused hot loop exactly as it shipped
+      (fixed ``chunk=65536``, argmin epilogue), inlined here so later
+      optimizations to ``assign_argmin_jnp`` can't leak into the
+      baseline the >= 1.1x gate measures against; labels stay
+      bit-identical to ``fused`` (chunk-invariance + the exact
+      first-occurrence index trick).
+    * ``fallback``  — the shipped unfused path for backends without moment
       support: assignment, then a ``segment_moments`` sweep sharing the
       fused path's reduction structure (results bit-for-bit identical).
-    * ``legacy``   — the pre-fusion hot loop exactly as the seed shipped
+    * ``legacy``    — the pre-fusion hot loop exactly as the seed shipped
       it: scatter-masked second-best in the assignment plus three global
       ``segment_sum`` reductions (reads every point twice).
+
+    Also emits the ``roofline`` record (launch/kernel_roofline.py):
+    analytic FLOPs/bytes/AI of the sweep plus the measured ``fused``
+    median -> achieved utilization, gated by ``compare_roofline``.
 
     ``quick`` does not shrink the problem — the gate's n=2^20 case runs
     in CI too, with the full rep count (the median feeds a hard gate).
@@ -156,7 +174,9 @@ def hotloop(n: int = HOTLOOP_N, k: int = HOTLOOP_K, d: int = 2,
     import jax
     import jax.numpy as jnp
 
-    from repro.kernels.ops import assign_argmin_jnp, segment_moments
+    from repro.kernels.ops import (assign_argmin_jnp, default_chunk,
+                                   resolve_assign_backend, segment_moments)
+    from repro.launch.kernel_roofline import kernel_roofline_record
 
     del quick
     rng = np.random.default_rng(0)
@@ -168,6 +188,37 @@ def hotloop(n: int = HOTLOOP_N, k: int = HOTLOOP_K, d: int = 2,
     @jax.jit
     def fused(p, w_, c, i_):
         return assign_argmin_jnp(p, c, i_, weights=w_, return_moments=True)
+
+    @jax.jit
+    def fused_pr4(p, w_, c, i_):
+        # the PR 4 fused hot loop exactly as it shipped: fixed
+        # chunk=65536 and the argmin-based epilogue (self-contained so
+        # later optimizations to assign_argmin_jnp can't leak in)
+        inv2 = 1.0 / (i_ * i_)
+        cn = jnp.sum(c * c, axis=1)
+
+        def one_chunk(args):
+            pc, wc = args
+            pn = jnp.sum(pc * pc, axis=1, keepdims=True)
+            eff = jnp.maximum(pn + cn[None, :] - 2.0 * pc @ c.T,
+                              0.0) * inv2[None, :]
+            idx = jnp.argmin(eff, axis=1).astype(jnp.int32)
+            onehot = idx[:, None] == jnp.arange(k)[None, :]
+            best = jnp.min(eff, axis=1)
+            second = jnp.min(jnp.where(onehot, jnp.inf, eff), axis=1)
+            ww = jnp.where(onehot, wc[:, None], 0.0)
+            stacked = jnp.concatenate(
+                [pc, jnp.ones((pc.shape[0], 1), pc.dtype),
+                 best[:, None]], axis=1)
+            return idx, best, second, ww.T @ stacked
+
+        chunk = 65536
+        pp = p.reshape(-1, chunk, d)
+        wc = w_.reshape(-1, chunk)
+        idx, b, s, m = jax.lax.map(one_chunk, (pp, wc))
+        m = m.sum(axis=0)
+        return (idx.reshape(-1), b.reshape(-1), s.reshape(-1),
+                m[:, :d], m[:, d], m[:, d + 1])
 
     @jax.jit
     def fallback(p, w_, c, i_):
@@ -200,7 +251,8 @@ def hotloop(n: int = HOTLOOP_N, k: int = HOTLOOP_K, d: int = 2,
         rad2 = jax.ops.segment_sum(w_ * b, idx, num_segments=k)
         return idx, b, s, csum, cw, rad2
 
-    fns = {"fused": fused, "fallback": fallback, "legacy": legacy}
+    fns = {"fused": fused, "fused_pr4": fused_pr4, "fallback": fallback,
+           "legacy": legacy}
     outs, times = {}, {v: [] for v in fns}
     for name, f in fns.items():                       # compile
         outs[name] = jax.block_until_ready(f(pts, w, ctr, infl))
@@ -213,19 +265,31 @@ def hotloop(n: int = HOTLOOP_N, k: int = HOTLOOP_K, d: int = 2,
     bitexact = all(bool(jnp.all(a == b))
                    for a, b in zip(outs["fused"], outs["fallback"]))
     labels_equal = all(bool(jnp.all(outs["fused"][0] == outs[v][0]))
-                       for v in ("fallback", "legacy"))
+                       for v in ("fused_pr4", "fallback", "legacy"))
+    backend = resolve_assign_backend("auto")
+    roofline = kernel_roofline_record(
+        n, d, k, measured_s=med["fused"], backend=backend)
+    roofline["chunk"] = default_chunk(k)
     out = {
         "n": n, "k": k, "d": d, "reps": reps,
         "rows": [{"variant": v, "time_s": med[v]} for v in fns],
         "speedup_vs_legacy": med["legacy"] / med["fused"],
         "speedup_vs_fallback": med["fallback"] / med["fused"],
+        "speedup_vs_pr4_fused": med["fused_pr4"] / med["fused"],
         "bitexact": bitexact, "labels_equal": labels_equal,
+        "roofline": roofline,
     }
     print(f"  hotloop n={n} k={k}: "
-          f"fused={med['fused']:.3f}s fallback={med['fallback']:.3f}s "
+          f"fused={med['fused']:.3f}s pr4={med['fused_pr4']:.3f}s "
+          f"fallback={med['fallback']:.3f}s "
           f"legacy={med['legacy']:.3f}s -> {out['speedup_vs_legacy']:.2f}x "
-          f"vs legacy, {out['speedup_vs_fallback']:.2f}x vs fallback, "
+          f"vs legacy, {out['speedup_vs_pr4_fused']:.2f}x vs pr4 fused, "
           f"bitexact={bitexact}")
+    print(f"  roofline [{roofline['platform']}/{backend}]: "
+          f"AI={roofline['ai']:.2f} flop/byte, "
+          f"bound={roofline['bound_s'] * 1e3:.1f}ms "
+          f"({roofline['bottleneck']}), measured={med['fused'] * 1e3:.1f}ms "
+          f"-> utilization={roofline['utilization']:.3f}")
     return out
 
 
@@ -247,8 +311,9 @@ def run(quick: bool = False, json_out: bool = False):
           "(one movement-iteration sweep, n=2^20)\n")
     hot = hotloop(quick=quick)
     print(md_table(hot["rows"], ["variant", "time_s"]))
+    roofline = hot.pop("roofline")
     out = {"spmd": spmd, "weak": weak, "strong": strong, "hotloop": hot,
-           "quick": quick}
+           "roofline": roofline, "quick": quick}
     save_json("scaling", out)
     if json_out:
         save_bench_json("scaling", out)

@@ -62,12 +62,13 @@ class BKMConfig:
     delta_tol: float = 5e-4        # movement threshold x bbox diagonal
     warmup: bool = True            # sampled warm-up rounds
     warmup_start: int = 100
-    backend: str = "auto"          # kernels.ops assign backend (jnp/pallas)
+    backend: str = "auto"          # kernels.ops assign backend
     use_kernel: bool = False       # deprecated: alias for backend="pallas"
     fused: bool | None = None      # fused assign+reduce; None = auto
     block_p: int = 1024            # kernel point-tile
     block_c: int = 128             # kernel center-tile
-    assign_chunk: int = 65536      # jnp path: point chunk to bound n*k memory
+    assign_chunk: int | None = None  # jnp path point chunk; None = adaptive
+    assign_precision: str = "f32"  # distance matmul: "f32" | "bf16"
     dtype: Any = jnp.float32
 
     def __post_init__(self):
@@ -79,6 +80,11 @@ class BKMConfig:
             # the movement moments ride out of the last balance iteration,
             # so the balance loop must run at least once
             raise ValueError("max_balance_iter must be >= 1")
+        from repro.kernels.assign_kernel import PRECISIONS
+        if self.assign_precision not in PRECISIONS:
+            raise ValueError(
+                f"assign_precision must be one of {PRECISIONS}, got "
+                f"{self.assign_precision!r}")
 
     @property
     def assign_backend(self) -> str:
@@ -98,17 +104,17 @@ def _reduce(x, axis_name, op="sum"):
     raise ValueError(op)
 
 
-def assign_effective(points, centers, influence, chunk=65536, backend="auto",
-                     block_p=1024, block_c=128):
+def assign_effective(points, centers, influence, chunk=None, backend="auto",
+                     block_p=1024, block_c=128, precision="f32"):
     """Returns (assignment [n] int32, best_eff [n], second_eff [n]) where
     best/second are *true* effective distances dist/influence.
 
     ``backend`` selects the squared-distance argmin implementation from the
-    ``kernels.ops`` registry ("jnp", "pallas", or "auto")."""
+    ``kernels.ops`` registry ("jnp", "pallas", "triton", or "auto")."""
     from repro.kernels.ops import assign_backend
     fn = assign_backend(backend)
     idx, b, s = fn(points, centers, influence, chunk=chunk,
-                   block_p=block_p, block_c=block_c)
+                   block_p=block_p, block_c=block_c, precision=precision)
     # second can be +inf when k == 1; keep bounds finite
     return idx, jnp.sqrt(b), jnp.sqrt(jnp.where(jnp.isfinite(s), s, b))
 
@@ -144,10 +150,12 @@ def assign_reduce(points, weights, centers, influence, cfg):
         idx, b, s, csum, cw, rad2 = fn(
             points, centers, influence, chunk=cfg.assign_chunk,
             block_p=cfg.block_p, block_c=cfg.block_c,
-            weights=weights, return_moments=True)
+            weights=weights, return_moments=True,
+            precision=cfg.assign_precision)
     else:
         idx, b, s = fn(points, centers, influence, chunk=cfg.assign_chunk,
-                       block_p=cfg.block_p, block_c=cfg.block_c)
+                       block_p=cfg.block_p, block_c=cfg.block_c,
+                       precision=cfg.assign_precision)
         csum, cw, rad2 = segment_moments(points, weights, idx, b, cfg.k,
                                          chunk=cfg.assign_chunk)
     return (idx, jnp.sqrt(b), jnp.sqrt(jnp.where(jnp.isfinite(s), s, b)),
@@ -430,10 +438,22 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
         points, w, centers, infl, A,
         jnp.full(n, jnp.inf, dtype), jnp.zeros(n, dtype), cfg, target,
         axis_name, valid=valid, n_valid=n_global)
+    # tile-pruning effectiveness under the final state: fraction of the
+    # kernel's (point-tile x center-tile) grid the bbox bound skips
+    # (estimated from the converged second-best; ops.tile_prune_fraction).
+    # lb after the final pass IS the second-best effective distance
+    # (entered with lb=0/ub=inf, so the Hamerly skip never retains stale
+    # bounds), squared back to the kernel's effective-sq space.
+    from repro.kernels.ops import tile_prune_fraction
+    frac = tile_prune_fraction(points, centers, infl, lb * lb,
+                               cfg.block_p, cfg.block_c)
+    n_shards = 1 if axis_name is None else jax.lax.psum(1, axis_name)
     stats = {"iters": it, "final_sizes": sizes,
              "final_imbalance": jnp.max(sizes) / target - 1.0,
              "final_balance_iters": st["balance_iters"],
-             "skip_fraction_final": st["skip_fraction"], "history": hist}
+             "skip_fraction_final": st["skip_fraction"],
+             "tiles_pruned_frac": _reduce(frac, axis_name) / n_shards,
+             "history": hist}
     return A, centers, infl, stats
 
 

@@ -32,12 +32,27 @@ TPU adaptation of the paper's geometric optimizations (DESIGN.md §4):
   adds its one-hot-matmul partial after its last center tile, so both grid
   dimensions become ``arbitrary`` (sequential) to keep the accumulation
   well-defined.
+* ``double_buffer=True`` (the roofline-driven DMA optimization,
+  DESIGN.md §4c): the point array moves to ``ANY`` (compiler-placed,
+  HBM-resident) memory and the kernel DMAs point tiles into a two-slot
+  VMEM scratch itself — tile ``i+1``'s copy is started when tile ``i``
+  begins its center sweep, so the HBM fetch of the next point tile
+  overlaps the MXU work of the current one across the whole center-tile
+  loop instead of only the one-block lookahead of the automatic
+  pipeline. Cross-iteration DMA state forces both grid dimensions
+  sequential (``arbitrary``); the default (``None``) enables it only for
+  the compiled TPU path and keeps the interpreter on the automatically
+  pipelined variant (CI covers both via an explicit flag).
+* ``precision="bf16"`` computes the ``p @ c^T`` cross term on the MXU in
+  bf16 (f32 accumulation); the norms ``|p|^2``/``|c|^2``, the Hamerly
+  best/second accumulators and the moment block stay f32. Tolerance
+  bounds documented in DESIGN.md §4c.
 
 Grid: ``(n_point_tiles, n_center_tiles)``. VMEM per step: BP*D + BC*D +
 BP*BC floats (+ 3 BP-sized accumulators, + BP + (d+2)*K + BP*K in moments
-mode) — e.g. BP=1024, BC=128, D<=128, K=1024 → ~5.5 MB, under the ~16 MB
-v5e VMEM budget, with BP*BC = 1024x128 matching MXU tiling (multiples of
-128 on the lane dimension).
+mode, + 2*BP*D double-buffer scratch) — e.g. BP=1024, BC=128, D<=128,
+K=1024 → ~5.5 MB, under the ~16 MB v5e VMEM budget, with BP*BC = 1024x128
+matching MXU tiling (multiples of 128 on the lane dimension).
 """
 from __future__ import annotations
 
@@ -50,11 +65,49 @@ from jax.experimental.pallas import tpu as pltpu
 
 # jax 0.4.x ships TPUCompilerParams; newer releases renamed it
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+_ANY = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+_ANY = _ANY.ANY
+
+PRECISIONS = ("f32", "bf16")
 
 
-def _assign_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
-                   idx_ref, best_ref, second_ref, *, block_c: int,
-                   k_real: int):
+def _check_tiling(n: int, k: int, block_p: int, block_c: int,
+                  entry: str) -> None:
+    """Wrapper-side padding contract: the kernel entry points only accept
+    tile-multiple shapes — ``ops.assign_argmin`` pads before calling. A
+    non-multiple shape reaching this point is a caller bug; name it."""
+    if n % block_p != 0:
+        raise ValueError(
+            f"{entry}: points axis n={n} is not a multiple of "
+            f"block_p={block_p}; pad the point array (ops.assign_argmin "
+            "does this) or pass a dividing block_p")
+    if k % block_c != 0:
+        raise ValueError(
+            f"{entry}: centers axis k={k} is not a multiple of "
+            f"block_c={block_c}; pad the center array with _FAR rows "
+            "(ops.assign_argmin does this) or pass a dividing block_c")
+
+
+def _cross_term(p, c, precision: str):
+    """-2 p @ c^T cross term of the squared distance, [BP, BC] f32.
+
+    ``bf16`` casts both operands to bfloat16 before the MXU matmul
+    (accumulation stays f32 via ``preferred_element_type``): half the
+    operand bandwidth and double the MXU rate on TPU, at a relative
+    distance error bounded by ~2^-8 per coordinate product."""
+    if precision == "bf16":
+        p = p.astype(jnp.bfloat16)
+        c = c.astype(jnp.bfloat16)
+    return jax.lax.dot_general(p, c, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _assign_step(p, bounds_ref, centers_ref, inv2_ref, idx_ref, best_ref,
+                 second_ref, *, block_c: int, k_real: int, precision: str):
+    """One (point-tile × center-tile) grid step: init at the first center
+    tile, tile-level bbox pruning, distance matmul + running
+    (best, second, argmin) update. ``p`` is the point tile, however it got
+    into VMEM (automatic pipeline or the double-buffer scratch)."""
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -70,14 +123,11 @@ def _assign_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
 
     @pl.when((j == 0) | (bound < worst_second))
     def _compute():
-        p = points_ref[...]                    # [BP, D]
         c = centers_ref[...]                   # [BC, D]
         inv2 = inv2_ref[...]                   # [1, BC]
         pn = jnp.sum(p * p, axis=1, keepdims=True)          # [BP, 1]
         cn = jnp.sum(c * c, axis=1)[None, :]                # [1, BC]
-        sq = pn + cn - 2.0 * jax.lax.dot_general(
-            p, c, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)             # [BP, BC]
+        sq = pn + cn - 2.0 * _cross_term(p, c, precision)   # [BP, BC]
         eff = jnp.maximum(sq, 0.0) * inv2                   # [BP, BC]
         # mask padded (_FAR) centers to +inf: their f32 distance overflows
         # (or NaNs via inf - inf) and must never reach argmin/second
@@ -105,21 +155,14 @@ def _assign_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
         idx_ref[...] = new_idx
 
 
-def _assign_moments_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
-                           w_ref, idx_ref, best_ref, second_ref,
-                           moments_ref, *, block_c: int, k_real: int):
-    """Assignment kernel + per-cluster moment accumulation.
-
-    ``moments_ref`` is a ``[d+2, K]`` VMEM block revisited across the
-    whole grid (constant index map): rows ``0..d-1`` hold the weighted
-    coordinate sums, row ``d`` the weighted counts, row ``d+1`` the
-    weighted best effective-sq distances — all in *sorted-center* column
-    space (the wrapper un-sorts). Each point tile contributes its one-hot
-    matmul partial once, after its final center tile.
-    """
-    _assign_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
-                   idx_ref, best_ref, second_ref, block_c=block_c,
-                   k_real=k_real)
+def _moments_step(p, w_ref, idx_ref, best_ref, moments_ref):
+    """Moment accumulation into the grid-wide ``[d+2, K]`` VMEM block:
+    rows ``0..d-1`` hold the weighted coordinate sums, row ``d`` the
+    weighted counts, row ``d+1`` the weighted best effective-sq distances
+    — all in *sorted-center* column space (the wrapper un-sorts). Each
+    point tile contributes its one-hot matmul partial once, after its
+    final center tile. Accumulation is always f32, independent of the
+    distance-matmul precision."""
     i = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -129,7 +172,6 @@ def _assign_moments_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
 
     @pl.when(j == pl.num_programs(1) - 1)
     def _accumulate():
-        p = points_ref[...]                                  # [BP, D]
         w = w_ref[...]                                       # [BP]
         idx = idx_ref[...]                                   # [BP]
         best = best_ref[...]                                 # [BP]
@@ -145,42 +187,138 @@ def _assign_moments_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
             preferred_element_type=jnp.float32)              # [D+2, K]
 
 
+def _points_db(points_hbm, pbuf, sem, block_p: int):
+    """Double-buffered point-tile fetch: wait for tile ``i``'s DMA (slot
+    ``i % 2``) at its first center tile and immediately start tile
+    ``i+1``'s copy into the other slot, so the next tile's HBM read is in
+    flight for the whole center sweep of the current one. Returns the
+    current tile's VMEM view. Requires a sequential point-tile grid
+    dimension (cross-iteration scratch + semaphore state)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    def dma(slot, tile):
+        return pltpu.make_async_copy(
+            points_hbm.at[pl.ds(tile * block_p, block_p), :],
+            pbuf.at[slot], sem.at[slot])
+
+    @pl.when((i == 0) & (j == 0))
+    def _warmup():
+        dma(0, 0).start()
+
+    @pl.when(j == 0)
+    def _rotate():
+        dma(i % 2, i).wait()
+
+        @pl.when(i + 1 < pl.num_programs(0))
+        def _prefetch():
+            dma((i + 1) % 2, i + 1).start()
+
+    return pbuf[i % 2]
+
+
+def _assign_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
+                   idx_ref, best_ref, second_ref, *, block_c: int,
+                   k_real: int, precision: str):
+    _assign_step(points_ref[...], bounds_ref, centers_ref, inv2_ref,
+                 idx_ref, best_ref, second_ref, block_c=block_c,
+                 k_real=k_real, precision=precision)
+
+
+def _assign_kernel_db(bounds_ref, points_hbm, centers_ref, inv2_ref,
+                      idx_ref, best_ref, second_ref, pbuf, sem, *,
+                      block_p: int, block_c: int, k_real: int,
+                      precision: str):
+    p = _points_db(points_hbm, pbuf, sem, block_p)
+    _assign_step(p, bounds_ref, centers_ref, inv2_ref,
+                 idx_ref, best_ref, second_ref, block_c=block_c,
+                 k_real=k_real, precision=precision)
+
+
+def _assign_moments_kernel(bounds_ref, points_ref, centers_ref, inv2_ref,
+                           w_ref, idx_ref, best_ref, second_ref,
+                           moments_ref, *, block_c: int, k_real: int,
+                           precision: str):
+    p = points_ref[...]
+    _assign_step(p, bounds_ref, centers_ref, inv2_ref, idx_ref, best_ref,
+                 second_ref, block_c=block_c, k_real=k_real,
+                 precision=precision)
+    _moments_step(p, w_ref, idx_ref, best_ref, moments_ref)
+
+
+def _assign_moments_kernel_db(bounds_ref, points_hbm, centers_ref,
+                              inv2_ref, w_ref, idx_ref, best_ref,
+                              second_ref, moments_ref, pbuf, sem, *,
+                              block_p: int, block_c: int, k_real: int,
+                              precision: str):
+    p = _points_db(points_hbm, pbuf, sem, block_p)
+    _assign_step(p, bounds_ref, centers_ref, inv2_ref, idx_ref, best_ref,
+                 second_ref, block_c=block_c, k_real=k_real,
+                 precision=precision)
+    _moments_step(p, w_ref, idx_ref, best_ref, moments_ref)
+
+
 def default_interpret() -> bool:
     """Backend auto-detection: run the Mosaic-compiled kernel on real TPUs,
     the Pallas interpreter everywhere else (CPU CI containers, GPU hosts)."""
     return jax.default_backend() != "tpu"
 
 
+def _resolve_db(double_buffer: bool | None, interpret: bool) -> bool:
+    # auto: manual DMA overlap pays on real hardware; the interpreter
+    # emulates DMAs synchronously, so default to the pipelined variant
+    # there (tests opt in explicitly to cover the DMA path on CPU).
+    return (not interpret) if double_buffer is None else double_buffer
+
+
 @functools.partial(jax.jit,
                    static_argnames=("k_real", "block_p", "block_c",
-                                    "interpret"))
+                                    "interpret", "precision",
+                                    "double_buffer"))
 def assign_argmin_pallas(points, centers, inv2, tile_bounds, k_real: int,
                          block_p: int = 1024, block_c: int = 128,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         precision: str = "f32",
+                         double_buffer: bool | None = None):
     """points [N, D], centers [K, D] (pre-padded), inv2 [K] = 1/influence^2,
     tile_bounds [N/BP, K/BC], k_real = number of real (non-_FAR) centers.
     Returns (idx, best_eff_sq, second_eff_sq).
 
     ``interpret=None`` auto-detects: compiled on TPU, interpret elsewhere.
     Pass an explicit bool to override (e.g. interpret-mode debugging on
-    TPU hosts)."""
+    TPU hosts). ``precision`` is the distance-matmul mode ("f32"/"bf16");
+    ``double_buffer`` selects the manual two-slot point-tile DMA (None =
+    only when compiled)."""
     if interpret is None:
         interpret = default_interpret()
     n, d = points.shape
     k = centers.shape[0]
-    assert n % block_p == 0 and k % block_c == 0
+    _check_tiling(n, k, block_p, block_c, "assign_argmin_pallas")
+    db = _resolve_db(double_buffer, interpret)
     grid = (n // block_p, k // block_c)
-    kernel = functools.partial(_assign_kernel, block_c=block_c,
-                               k_real=k_real)
+    common = [
+        pl.BlockSpec((block_c, d), lambda i, j: (j, 0)),      # centers
+        pl.BlockSpec((1, block_c), lambda i, j: (0, j)),      # inv2
+    ]
+    if db:
+        kernel = functools.partial(_assign_kernel_db, block_p=block_p,
+                                   block_c=block_c, k_real=k_real,
+                                   precision=precision)
+        points_spec = pl.BlockSpec(memory_space=_ANY)
+        scratch = [pltpu.VMEM((2, block_p, d), jnp.float32),
+                   pltpu.SemaphoreType.DMA((2,))]
+        semantics = ("arbitrary", "arbitrary")
+    else:
+        kernel = functools.partial(_assign_kernel, block_c=block_c,
+                                   k_real=k_real, precision=precision)
+        points_spec = pl.BlockSpec((block_p, d), lambda i, j: (i, 0))
+        scratch = []
+        semantics = ("parallel", "arbitrary")
     idx, best, second = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),            # bounds
-            pl.BlockSpec((block_p, d), lambda i, j: (i, 0)),      # points
-            pl.BlockSpec((block_c, d), lambda i, j: (j, 0)),      # centers
-            pl.BlockSpec((1, block_c), lambda i, j: (0, j)),      # inv2
-        ],
+        in_specs=[pl.BlockSpec((1, 1), lambda i, j: (i, j)),  # bounds
+                  points_spec] + common,
         out_specs=[
             pl.BlockSpec((block_p,), lambda i, j: (i,)),
             pl.BlockSpec((block_p,), lambda i, j: (i,)),
@@ -191,8 +329,8 @@ def assign_argmin_pallas(points, centers, inv2, tile_bounds, k_real: int,
             jax.ShapeDtypeStruct((n,), jnp.float32),
             jax.ShapeDtypeStruct((n,), jnp.float32),
         ],
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        scratch_shapes=scratch,
+        compiler_params=_CompilerParams(dimension_semantics=semantics),
         interpret=interpret,
     )(tile_bounds, points, centers, inv2[None, :])
     return idx, best, second
@@ -200,11 +338,14 @@ def assign_argmin_pallas(points, centers, inv2, tile_bounds, k_real: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("k_real", "block_p", "block_c",
-                                    "interpret"))
+                                    "interpret", "precision",
+                                    "double_buffer"))
 def assign_reduce_pallas(points, centers, inv2, tile_bounds, weights,
                          k_real: int, block_p: int = 1024,
                          block_c: int = 128,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         precision: str = "f32",
+                         double_buffer: bool | None = None):
     """Fused assign+reduce: one pass over the point tiles returning
     (idx, best_eff_sq, second_eff_sq, moments [d+2, K]) with the moment
     block accumulated in VMEM across point tiles (sorted-center columns:
@@ -215,16 +356,27 @@ def assign_reduce_pallas(points, centers, inv2, tile_bounds, weights,
         interpret = default_interpret()
     n, d = points.shape
     k = centers.shape[0]
-    assert n % block_p == 0 and k % block_c == 0
+    _check_tiling(n, k, block_p, block_c, "assign_reduce_pallas")
+    db = _resolve_db(double_buffer, interpret)
     grid = (n // block_p, k // block_c)
-    kernel = functools.partial(_assign_moments_kernel, block_c=block_c,
-                               k_real=k_real)
+    if db:
+        kernel = functools.partial(_assign_moments_kernel_db,
+                                   block_p=block_p, block_c=block_c,
+                                   k_real=k_real, precision=precision)
+        points_spec = pl.BlockSpec(memory_space=_ANY)
+        scratch = [pltpu.VMEM((2, block_p, d), jnp.float32),
+                   pltpu.SemaphoreType.DMA((2,))]
+    else:
+        kernel = functools.partial(_assign_moments_kernel, block_c=block_c,
+                                   k_real=k_real, precision=precision)
+        points_spec = pl.BlockSpec((block_p, d), lambda i, j: (i, 0))
+        scratch = []
     idx, best, second, moments = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j: (i, j)),            # bounds
-            pl.BlockSpec((block_p, d), lambda i, j: (i, 0)),      # points
+            points_spec,                                          # points
             pl.BlockSpec((block_c, d), lambda i, j: (j, 0)),      # centers
             pl.BlockSpec((1, block_c), lambda i, j: (0, j)),      # inv2
             pl.BlockSpec((block_p,), lambda i, j: (i,)),          # weights
@@ -241,6 +393,7 @@ def assign_reduce_pallas(points, centers, inv2, tile_bounds, weights,
             jax.ShapeDtypeStruct((n,), jnp.float32),
             jax.ShapeDtypeStruct((d + 2, k), jnp.float32),
         ],
+        scratch_shapes=scratch,
         # the moment block accumulates across BOTH grid dimensions, so the
         # point-tile dimension must be sequential too
         compiler_params=_CompilerParams(

@@ -35,16 +35,33 @@ Registered backends:
                fused moments fold into the same chunk loop.
 * ``pallas`` — the fused TPU kernel (assign_kernel.py): tile-level
                Hamerly/bbox pruning, centers pre-sorted by bbox distance,
-               moments accumulated in VMEM across point tiles.
-* ``auto``   — resolves to ``pallas`` on TPU hosts (or whenever
-               ``REPRO_PALLAS_INTERPRET=1`` forces interpret mode, so CI
-               exercises the kernel path on CPU) and ``jnp`` elsewhere.
+               moments accumulated in VMEM across point tiles,
+               double-buffered point-tile DMA when compiled.
+* ``triton`` — the GPU-portable variant (triton_assign.py): 1-D grid over
+               point tiles, in-kernel loop over center tiles, split-k
+               moment partials — no TPU-only primitives, so the same body
+               is Mosaic-GPU/Triton lowerable; interpret-verified on CPU.
+* ``auto``   — per-platform resolution, in order: the
+               ``REPRO_ASSIGN_BACKEND`` env override; ``pallas`` whenever
+               ``REPRO_PALLAS_INTERPRET=1`` forces interpret mode (the CI
+               switch that exercises the kernel path on CPU); ``pallas``
+               on real TPUs (``jnp`` for sub-tile shard_map shards);
+               ``triton`` on GPUs; ``jnp`` on CPU.
+
+All backends accept ``precision`` ("f32" default, "bf16" = bf16 distance
+matmul with f32 accumulation — DESIGN.md §4c documents the tolerance) and
+``chunk=None`` meaning ``default_chunk(k)``: the point-axis tile sized so
+the [chunk, k] effective-distance scratch stays cache/VMEM-resident
+(the roofline analysis in launch/kernel_roofline.py showed the former
+fixed 65536 default spilling the scratch at k>=16 on bandwidth-bound
+hosts, costing ~1.35x at the gate shape n=2^20 k=64).
 
 Third-party backends can be added with ``@register_assign_backend(name)``
 (e.g. a CUDA Triton port); ``BKMConfig.backend`` then selects them by
 name. Pallas kernels themselves auto-detect compiled-vs-interpret from the
 jax backend (assign_kernel.default_interpret); set
-``REPRO_PALLAS_INTERPRET=0/1`` to force either mode.
+``REPRO_PALLAS_INTERPRET=0/1`` to force either mode, and
+``REPRO_ASSIGN_BACKEND=<name>`` to pin what ``auto`` resolves to.
 """
 from __future__ import annotations
 
@@ -64,6 +81,18 @@ _FAR = 1e30   # padded-center coordinate; masked out by k_real in-kernel
 
 def _interpret_mode() -> bool:
     return default_interpret() if _INTERPRET is None else _INTERPRET
+
+
+def default_chunk(k: int) -> int:
+    """Point-axis chunk for the dense backends when the caller passes
+    ``chunk=None``: size the [chunk, k] f32 effective-distance scratch to
+    ~2 MB so it stays cache-resident on bandwidth-bound hosts (measured
+    1.35x at n=2^20 k=64 vs the former fixed 65536 — see the roofline
+    notes in launch/kernel_roofline.py), clamped to [2048, 65536].
+    Chunking only tiles the point axis, so per-point results (labels,
+    best/second) are bit-identical across chunk sizes; only the cross-
+    chunk *moment* summation order changes."""
+    return max(2048, min(65536, (1 << 19) // max(k, 1)))
 
 
 # ---------------------------------------------------------------------------
@@ -97,12 +126,25 @@ def available_assign_backends() -> list[str]:
 def resolve_assign_backend(name: str = "auto", *, sharded: bool = False,
                            n_local: int | None = None) -> str:
     """Map ``auto`` to a concrete backend for the current jax platform.
+
+    Resolution order for ``auto`` (DESIGN.md §4c):
+
+    1. ``REPRO_ASSIGN_BACKEND=<name>`` — env override, read per call so a
+       test/CI leg can pin the resolution without re-importing. Only
+       ``auto`` is overridden: an explicitly named backend always wins,
+       so suites that exercise a specific backend stay meaningful under
+       the override.
+    2. forced interpret (``REPRO_PALLAS_INTERPRET=1``) → ``pallas`` —
+       the CI switch that exercises the kernel code path (including the
+       fused moment accumulators) on CPU-only runners.
+    3. real TPU → ``pallas`` (but ``jnp`` for sub-tile shard_map shards,
+       see below).
+    4. GPU → ``triton`` (the portable 1-D-grid kernel; no TPU-only
+       primitives, Mosaic-GPU lowerable).
+    5. otherwise (CPU) → ``jnp``.
+
     Keyed off ``default_interpret()`` so the backend choice and the
-    kernel's compiled-vs-interpret decision share one predicate. When
-    ``REPRO_PALLAS_INTERPRET=1`` explicitly forces interpret mode, ``auto``
-    resolves to ``pallas`` everywhere — that is the CI switch that
-    exercises the kernel code path (including the fused moment
-    accumulators) on CPU-only runners.
+    kernel's compiled-vs-interpret decision share one predicate.
 
     ``sharded=True`` marks resolution for a ``shard_map`` body (the
     distributed partitioner): the choice is pinned *before* tracing —
@@ -113,13 +155,23 @@ def resolve_assign_backend(name: str = "auto", *, sharded: bool = False,
     jnp path even on TPU hosts.
     """
     if name == "auto":
+        env = os.environ.get("REPRO_ASSIGN_BACKEND")
+        if env:
+            if env not in _ASSIGN_BACKENDS:
+                raise KeyError(
+                    f"REPRO_ASSIGN_BACKEND={env!r} is not a registered "
+                    f"assign backend; available: "
+                    f"{available_assign_backends()}")
+            return env
         if _INTERPRET:                 # forced interpret: cover the kernel
             return "pallas"
-        if default_interpret():
-            return "jnp"
-        if sharded and n_local is not None and n_local < 1024:
-            return "jnp"
-        return "pallas"
+        if not default_interpret():    # real TPU
+            if sharded and n_local is not None and n_local < 1024:
+                return "jnp"
+            return "pallas"
+        if jax.default_backend() == "gpu":
+            return "triton"
+        return "jnp"
     if name not in _ASSIGN_BACKENDS:
         raise KeyError(f"unknown assign backend {name!r}; "
                        f"available: {available_assign_backends()}")
@@ -136,16 +188,32 @@ def backend_supports_moments(name: str = "auto") -> bool:
     return resolve_assign_backend(name) in _ASSIGN_MOMENTS
 
 
-def _chunk_assign(p, cn, centers, inv2):
+def _chunk_assign(p, cn, centers, inv2, precision: str = "f32"):
     """One dense chunk of the effective-distance argmin. Returns
     (idx, best, second, onehot) — ``onehot`` [C, k] bool marks each
-    point's winning center and is reused by the fused moment reduction."""
+    point's winning center and is reused by the fused moment reduction.
+    ``precision="bf16"`` casts only the cross-term matmul operands to
+    bfloat16 (f32 accumulation); norms and the epilogue stay f32."""
     pn = jnp.sum(p * p, axis=1, keepdims=True)
-    sq = pn + cn[None, :] - 2.0 * p @ centers.T
+    if precision == "bf16":
+        cross2 = 2.0 * jax.lax.dot_general(
+            p.astype(jnp.bfloat16), centers.astype(jnp.bfloat16),
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    else:
+        cross2 = 2.0 * p @ centers.T    # == (2p) @ c.T, the legacy form
+    sq = pn + cn[None, :] - cross2
     eff = jnp.maximum(sq, 0.0) * inv2[None, :]
-    idx = jnp.argmin(eff, axis=1).astype(jnp.int32)
-    onehot = idx[:, None] == jnp.arange(eff.shape[1])[None, :]
+    k = eff.shape[1]
+    # argmin-free epilogue: XLA CPU lowers arg-reductions to a scalar
+    # loop, while plain min/max vectorize. min + exact-equality + an
+    # integer max over (k - j) recovers the *first* index attaining the
+    # min — bit-identical to jnp.argmin (min returns an element of the
+    # row exactly), measured ~1.5x on the n=2^20 hot loop.
     best = jnp.min(eff, axis=1)
+    iseq = eff == best[:, None]
+    rev = jnp.arange(k, 0, -1, dtype=jnp.int32)
+    idx = (k - jnp.max(iseq * rev[None, :], axis=1)).astype(jnp.int32)
+    onehot = idx[:, None] == jnp.arange(k)[None, :]
     second = jnp.min(jnp.where(onehot, jnp.inf, eff), axis=1)
     return idx, best, second, onehot
 
@@ -166,7 +234,7 @@ def _split_moments(m, d):
 
 
 def segment_moments(points, weights, idx, best_sq, k: int, *,
-                    chunk: int = 65536):
+                    chunk: int | None = None):
     """Per-cluster weighted moments of an existing assignment — the
     unfused fallback for assignment backends without moment support.
 
@@ -177,8 +245,10 @@ def segment_moments(points, weights, idx, best_sq, k: int, *,
         best_sq: [n] best effective *squared* distances (as returned by
             the assignment backends).
         k: number of clusters.
-        chunk: point-axis tile; MUST match the assignment call's chunk for
-            bit-exact agreement with the fused path.
+        chunk: point-axis tile (None = ``default_chunk(k)``); MUST match
+            the assignment call's chunk for bit-exact agreement with the
+            fused path (both resolve None identically, so leaving both
+            unset is safe).
 
     Returns:
         (csum [k, d], cw [k], rad2 [k]) — weighted coordinate sums,
@@ -188,6 +258,8 @@ def segment_moments(points, weights, idx, best_sq, k: int, *,
         bit-for-bit identical to ``return_moments=True``.
     """
     n, d = points.shape
+    if chunk is None:
+        chunk = default_chunk(k)
     arange_k = jnp.arange(k)[None, :]
 
     def one(p, w, ix, b):
@@ -205,11 +277,16 @@ def segment_moments(points, weights, idx, best_sq, k: int, *,
 
 
 @register_assign_backend("jnp", supports_moments=True)
-def assign_argmin_jnp(points, centers, influence, *, chunk: int = 65536,
+def assign_argmin_jnp(points, centers, influence, *,
+                      chunk: int | None = None,
                       block_p: int = 1024, block_c: int = 128,
-                      weights=None, return_moments: bool = False):
+                      weights=None, return_moments: bool = False,
+                      precision: str = "f32"):
     """Chunked dense path (the paper's inner loop as one matmul per chunk).
     ``block_p``/``block_c`` are accepted for contract parity and ignored.
+    ``chunk=None`` resolves to ``default_chunk(k)`` (cache-resident
+    [chunk, k] scratch); per-point results are chunk-invariant, so the
+    default change is label-bitexact vs any fixed chunk.
 
     With ``return_moments=True`` (requires ``weights``) the per-cluster
     moment partials are computed inside the same chunk loop while the
@@ -219,15 +296,18 @@ def assign_argmin_jnp(points, centers, influence, *, chunk: int = 65536,
     del block_p, block_c
     if return_moments and weights is None:
         raise ValueError("return_moments=True requires weights")
+    if chunk is None:
+        chunk = default_chunk(centers.shape[0])
     inv2 = 1.0 / (influence * influence)
     cn = jnp.sum(centers * centers, axis=1)
     n, d = points.shape
 
     def one_chunk(p):
-        return _chunk_assign(p, cn, centers, inv2)[:3]
+        return _chunk_assign(p, cn, centers, inv2, precision)[:3]
 
     def one_chunk_fused(p, w):
-        idx, best, second, onehot = _chunk_assign(p, cn, centers, inv2)
+        idx, best, second, onehot = _chunk_assign(p, cn, centers, inv2,
+                                                  precision)
         return idx, best, second, _chunk_moments(onehot, p, w, best)
 
     if n <= chunk:
@@ -266,16 +346,20 @@ def _tile_bounds(points, centers, inv2, block_p, block_c):
 
 
 @functools.partial(jax.jit, static_argnames=("block_p", "block_c",
-                                             "return_moments"))
+                                             "return_moments", "precision",
+                                             "double_buffer"))
 def assign_argmin(points, centers, influence, block_p: int = 1024,
                   block_c: int = 128, weights=None,
-                  return_moments: bool = False):
+                  return_moments: bool = False, precision: str = "f32",
+                  double_buffer: bool | None = None):
     """Drop-in replacement for ref.assign_argmin_ref (same returns).
 
     ``return_moments=True`` (requires ``weights``) runs the fused
     assign+reduce kernel: the per-cluster weighted moments are accumulated
     in VMEM across point tiles and un-sorted back to original center ids
     here, so the [n, d] point array is streamed exactly once.
+    ``precision``/``double_buffer`` pass through to the kernel (DESIGN.md
+    §4c): bf16 distance matmul and manual two-slot point-tile DMA.
     """
     n, d = points.shape
     k = centers.shape[0]
@@ -305,7 +389,8 @@ def assign_argmin(points, centers, influence, block_p: int = 1024,
         w = jnp.pad(weights, (0, pad_n)).astype(jnp.float32)
         idx_s, best, second, m = assign_reduce_pallas(
             pts, cts, iv2, bounds, w, k_real=k, block_p=block_p,
-            block_c=block_c, interpret=_interpret_mode())
+            block_c=block_c, interpret=_interpret_mode(),
+            precision=precision, double_buffer=double_buffer)
         # un-sort the [d+2, K_pad] moment block: sorted column j belongs
         # to original center order[j]; padded columns carry no weight
         m_orig = jnp.zeros((k, d + 2), jnp.float32).at[order].set(m.T[:k])
@@ -315,7 +400,8 @@ def assign_argmin(points, centers, influence, block_p: int = 1024,
                 m_orig[:, :d], m_orig[:, d], m_orig[:, d + 1])
     idx_s, best, second = assign_argmin_pallas(
         pts, cts, iv2, bounds, k_real=k, block_p=block_p, block_c=block_c,
-        interpret=_interpret_mode())
+        interpret=_interpret_mode(), precision=precision,
+        double_buffer=double_buffer)
     idx_s, best, second = idx_s[:n], best[:n], second[:n]
     # map sorted-center index back to the original center id
     idx = order[jnp.clip(idx_s, 0, k - 1)].astype(jnp.int32)
@@ -324,15 +410,63 @@ def assign_argmin(points, centers, influence, block_p: int = 1024,
 
 @register_assign_backend("pallas", supports_moments=True)
 def assign_argmin_pallas_backend(points, centers, influence, *,
-                                 chunk: int = 65536, block_p: int = 1024,
+                                 chunk: int | None = None,
+                                 block_p: int = 1024,
                                  block_c: int = 128, weights=None,
-                                 return_moments: bool = False):
+                                 return_moments: bool = False,
+                                 precision: str = "f32"):
     """Registry adapter for the Pallas kernel (``chunk`` is ignored: the
     kernel's own point tiling bounds VMEM)."""
     del chunk
     return assign_argmin(points, centers, influence,
                          block_p=block_p, block_c=block_c,
-                         weights=weights, return_moments=return_moments)
+                         weights=weights, return_moments=return_moments,
+                         precision=precision)
+
+
+def tile_prune_fraction(points, centers, influence, second_sq,
+                        block_p: int = 1024, block_c: int = 128):
+    """Host-side estimate of the fraction of (point-tile × center-tile)
+    grid steps the Pallas kernel's ``pl.when`` bbox bound prunes, for
+    ``stats["tiles_pruned_frac"]`` (useful-vs-wasted compute in the
+    roofline table).
+
+    Mirrors the kernel's setup — centers sorted by bbox distance, point
+    and center axes padded to tile multiples (edge-replicated points so
+    tile bboxes stay tight) — then counts pairs whose bound cannot beat
+    the point tile's worst *converged* second-best (``second_sq``, in
+    effective-squared space, e.g. ``lb**2`` after a balance pass). The
+    first center tile is never pruned (the kernel unconditionally
+    computes j == 0 to initialize its accumulators). This is the
+    steady-state bound — inside one sweep the kernel's running
+    second-best starts at +inf, so the realized fraction converges to
+    this value from below. Traceable; psum the numerator under shard_map
+    (balanced_kmeans averages it over shards).
+    """
+    n, d = points.shape
+    k = centers.shape[0]
+    inv2 = 1.0 / (influence * influence)
+    lo = jnp.min(points, axis=0)
+    hi = jnp.max(points, axis=0)
+    gap = jnp.maximum(jnp.maximum(lo[None] - centers, centers - hi[None]),
+                      0.0)
+    key = jnp.sum(gap * gap, axis=1) * inv2
+    order = jnp.argsort(key)
+    pad_n = (-n) % block_p
+    pad_k = (-k) % block_c
+    pts = jnp.pad(points, ((0, pad_n), (0, 0)), mode="edge")
+    cts = jnp.pad(centers[order], ((0, pad_k), (0, 0)),
+                  constant_values=_FAR)
+    iv2 = jnp.pad(inv2[order], (0, pad_k), constant_values=1.0)
+    bounds = _tile_bounds(pts.astype(jnp.float32), cts.astype(jnp.float32),
+                          iv2.astype(jnp.float32), block_p, block_c)
+    sec = jnp.pad(second_sq, (0, pad_n), mode="edge")
+    # a tile prunes only when the bound beats its WORST second-best; an
+    # infinite second (k == 1) makes the tile unprunable, as in-kernel
+    worst = jnp.max(sec.reshape(-1, block_p), axis=1)     # [nPT]
+    prunable = bounds >= worst[:, None]
+    prunable = prunable.at[:, 0].set(False)               # j == 0 runs
+    return jnp.mean(prunable.astype(jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "bk", "softcap"))
@@ -361,20 +495,29 @@ def flash_attention(q, k, v, bq: int = 512, bk: int = 512,
     return o[:, :S]
 
 
-@functools.partial(jax.jit, static_argnames=("top_k", "bt"))
-def router_topk(x, centroids, influence, top_k: int, bt: int = 256):
+@functools.partial(jax.jit, static_argnames=("top_k", "bt", "block_e"))
+def router_topk(x, centroids, influence, top_k: int, bt: int = 256,
+                block_e: int = 128):
     """Fused balanced-k-means MoE routing. x: [T, D], centroids: [E, D],
-    influence: [E]. Returns (idx [T, top_k], eff [T, top_k])."""
+    influence: [E]. Returns (idx [T, top_k], eff [T, top_k]). E may exceed
+    one VMEM tile: the kernel sweeps center tiles of ``block_e`` through
+    the shared tiled path, merging a running top-k across tiles."""
     from .moe_router_kernel import router_topk_pallas
     T, D = x.shape
     E = centroids.shape[0]
     inv2 = 1.0 / (influence * influence)
     pad_t = (-T) % bt
-    pad_e = (-E) % 128
+    pad_e = (-E) % block_e
     xp = jnp.pad(x, ((0, pad_t), (0, 0))).astype(jnp.float32)
     cp = jnp.pad(centroids, ((0, pad_e), (0, 0)),
                  constant_values=_FAR).astype(jnp.float32)
     ip = jnp.pad(inv2, (0, pad_e), constant_values=1.0).astype(jnp.float32)
     idx, eff = router_topk_pallas(xp, cp, ip, top_k=top_k, bt=bt,
+                                  block_e=block_e, e_real=E,
                                   interpret=_interpret_mode())
     return idx[:T], eff[:T]
+
+
+# registering the triton-shaped backend imports this module back, so the
+# import must sit after every name it needs is defined
+from . import triton_assign as _triton_assign  # noqa: E402,F401

@@ -98,6 +98,10 @@ def _router_inputs(T, E, D, seed=0):
     (512, 16, 64, 2, 128),        # jamba top-2
     (512, 40, 32, 8, 256),        # granite top-8, E padded 40->128
     (300, 128, 128, 2, 128),      # T padding
+    # E > 128: expert axis tiled, running top-k merged across tiles
+    (512, 200, 64, 4, 128),       # 2 tiles, second tile padded 200->256
+    (300, 256, 32, 8, 128),       # 2 exact tiles + T padding, deep top-k
+    (256, 384, 16, 2, 256),       # 3 tiles
 ])
 def test_router_matches_ref(T, E, D, K, bt):
     x, c, infl = _router_inputs(T, E, D)
@@ -123,7 +127,7 @@ def test_router_uniform_influence_is_nearest_expert():
 
 
 @settings(max_examples=10, deadline=None)
-@given(T=st.integers(64, 300), E=st.integers(2, 40),
+@given(T=st.integers(64, 300), E=st.integers(2, 160),
        K=st.integers(1, 4), D=st.sampled_from([8, 32]))
 def test_router_property(T, E, K, D):
     K = min(K, E)

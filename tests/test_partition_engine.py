@@ -318,9 +318,10 @@ def test_fused_true_requires_capable_backend(problem):
     from repro.kernels.ops import assign_argmin_jnp
 
     @register_assign_backend("_nomoments_test")
-    def _plain(points, centers, influence, *, chunk=65536, block_p=1024,
-               block_c=128):
-        return assign_argmin_jnp(points, centers, influence, chunk=chunk)
+    def _plain(points, centers, influence, *, chunk=None, block_p=1024,
+               block_c=128, precision="f32"):
+        return assign_argmin_jnp(points, centers, influence, chunk=chunk,
+                                 precision=precision)
 
     try:
         with pytest.raises(ValueError, match="support"):

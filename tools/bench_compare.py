@@ -18,11 +18,17 @@ baselines and exits non-zero on a regression:
   counts {1, 2, 4, 8} — plus ``imbalance``, ``iters`` (slack of 2
   movement iterations) and the ``balanced`` flag.
 * scaling ``hotloop`` section: the fused assign+reduce sweep must be
-  bit-exact vs the unfused fallback and >= 1.3x over the legacy
-  two-sweep hot loop (absolute floors, independent of the baseline
-  values); the break-even-vs-fallback floor is wall-clock-noise-bound
-  and therefore soft unless ``--gate-time``. The (n, k) config must
-  match the baseline.
+  bit-exact vs the unfused fallback, >= 1.3x over the legacy two-sweep
+  hot loop and >= 1.1x over the PR 4 fixed-chunk fused baseline
+  (absolute floors, independent of the baseline values — both are
+  same-run interleaved ratios, immune to machine speed); the
+  break-even-vs-fallback floor is wall-clock-noise-bound and therefore
+  soft unless ``--gate-time``. The (n, k) config must match the
+  baseline.
+* scaling ``roofline`` record (``compare_roofline``): record presence
+  and schema-field coverage are hard; the measured utilization numbers
+  (an absolute 0.1% sanity floor and a >10% regression envelope vs
+  baseline) are wall-clock-derived and soft unless ``--gate-time``.
 * repartition: the warm-vs-cold acceptance floors hold absolutely
   (``iters_ratio >= 3``, ``migration_ratio <= 0.30``, every step of both
   runs balanced), and the warm run's mean iterations / mean migration
@@ -107,6 +113,7 @@ def compare_quality(base, cur, tol: float, rep: Report):
 
 HOTLOOP_SPEEDUP_FLOOR = 1.3    # fused >= 1.3x over the legacy hot loop
 HOTLOOP_FALLBACK_FLOOR = 0.9   # fusing must never cost (noise slack)
+HOTLOOP_PR4_FLOOR = 1.1        # adaptive chunk >= 1.1x over PR 4 fused
 
 
 def compare_hotloop(base, cur, rep: Report, gate_time: bool):
@@ -131,6 +138,11 @@ def compare_hotloop(base, cur, rep: Report, gate_time: bool):
              f"fused speedup {hot.get('speedup_vs_legacy')} below the "
              f">= {HOTLOOP_SPEEDUP_FLOOR}x floor over the legacy "
              "two-sweep hot loop")
+    rep.gate(hot.get("speedup_vs_pr4_fused", 0.0) >= HOTLOOP_PR4_FLOOR,
+             "scaling.hotloop.speedup_vs_pr4_fused",
+             f"fused sweep {hot.get('speedup_vs_pr4_fused')}x vs the "
+             f"PR 4 fixed-chunk fused baseline — the adaptive-chunk "
+             f"roofline win must hold the >= {HOTLOOP_PR4_FLOOR}x floor")
     # the fallback ratio hovers near 1.0 by design (the fallback re-reads
     # the points but does the same arithmetic), so on shared runners it is
     # soft-gated like every other wall-clock metric (--gate-time hardens)
@@ -141,6 +153,46 @@ def compare_hotloop(base, cur, rep: Report, gate_time: bool):
              hard=gate_time)
 
 
+# roofline record: structural coverage is hard (the record and every
+# schema field must exist — a silently dropped profile is a coverage
+# regression), the utilization numbers are wall-clock-derived and
+# therefore soft unless --gate-time (shared runners are noisy), with a
+# >10% regression envelope vs baseline per the profile's charter
+ROOFLINE_FIELDS = ("platform", "backend", "n", "d", "k", "ai",
+                   "compute_s", "memory_s", "bound_s", "bottleneck",
+                   "measured_s", "utilization")
+ROOFLINE_REGRESSION_TOL = 0.10
+
+
+def compare_roofline(base, cur, rep: Report, gate_time: bool):
+    roof = cur.get("roofline")
+    if roof is None:
+        rep.add(FAIL, "scaling.roofline",
+                "roofline record missing from current run")
+        return
+    for fld in ROOFLINE_FIELDS:
+        rep.gate(roof.get(fld) is not None, f"scaling.roofline.{fld}",
+                 "schema field missing/null from the roofline record")
+    broof = base.get("roofline", {})
+    for fld in ("n", "d", "k"):
+        rep.gate(broof.get(fld) == roof.get(fld),
+                 f"scaling.roofline.config.{fld}",
+                 "incommensurable roofline records: "
+                 + _fmt(roof.get(fld), broof.get(fld)))
+    util, butil = roof.get("utilization"), broof.get("utilization")
+    if util is not None:
+        # sanity floor: a three-orders-of-magnitude miss means the model
+        # or the measurement broke, not that the machine was busy
+        rep.gate(util >= 1e-3, "scaling.roofline.utilization",
+                 f"measured utilization {util} below the absolute 0.1% "
+                 "sanity floor", hard=gate_time)
+        if butil:
+            rep.gate(util >= butil * (1.0 - ROOFLINE_REGRESSION_TOL),
+                     "scaling.roofline.utilization_regression",
+                     f"measured hotloop utilization regressed >10%: "
+                     + _fmt(util, butil), hard=gate_time)
+
+
 def compare_scaling(base, cur, tol: float, rep: Report,
                     gate_time: bool, time_tol: float):
     rep.gate(base.get("quick") == cur.get("quick"), "scaling.config.quick",
@@ -148,6 +200,7 @@ def compare_scaling(base, cur, tol: float, rep: Report,
              "--quick setting): " + _fmt(cur.get("quick"),
                                          base.get("quick")))
     compare_hotloop(base, cur, rep, gate_time)
+    compare_roofline(base, cur, rep, gate_time)
     cur_rows = {(r["method"], r["devices"]): r for r in cur.get("spmd", [])}
     seen_devices = {r["devices"] for r in cur.get("spmd", [])}
     for d in (1, 2, 4, 8):
