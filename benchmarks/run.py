@@ -20,6 +20,9 @@ Modules:
   repartition — dynamic repartitioning: warm-started Geographer vs cold
                 restart on a drifting-hotspot workload (iterations,
                 migration volume, per-step balance)
+  serving     — multi-tenant PartitionServer: slot-bucketed batched
+                dispatch + warm-state cache vs all-cold serving
+                (throughput, request latency, warm-hit rate)
   experiments — §5 comparison matrix: every registered method × the
                 expanded mesh zoo, sharded in-graph evaluation, with the
                 paper-trend summary (geographer vs sfc/rcb comm volume)
@@ -33,8 +36,8 @@ import argparse
 import time
 import traceback
 
-ALL = ["quality", "scaling", "repartition", "experiments", "components",
-       "moe_router", "roofline"]
+ALL = ["quality", "scaling", "repartition", "serving", "experiments",
+       "components", "moe_router", "roofline"]
 
 
 def _force_virtual_devices() -> None:
@@ -54,7 +57,7 @@ def main() -> None:
     ap.add_argument("--json", action="store_true",
                     help="also emit machine-readable BENCH_<name>.json "
                          "regression files (quality, scaling, "
-                         "repartition, experiments)")
+                         "repartition, serving, experiments)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else ALL
     _force_virtual_devices()
@@ -73,6 +76,9 @@ def main() -> None:
             elif name == "repartition":
                 from . import repartition
                 repartition.run(quick=args.quick, json_out=args.json)
+            elif name == "serving":
+                from . import serving
+                serving.run(quick=args.quick, json_out=args.json)
             elif name == "experiments":
                 from . import experiments
                 experiments.run(quick=args.quick, json_out=args.json)

@@ -1,0 +1,161 @@
+"""Multi-tenant partition serving benchmark (DESIGN.md §10).
+
+Drives ``repro.serve.PartitionServer`` with a fleet of tenants whose load
+drifts every step (the PR 3 drifting-hotspot workload), twice over the
+SAME request stream:
+
+* **warm** — the caching server: step 0 cold-starts every tenant, every
+  later request hits the warm-state slot cache and resumes balanced
+  k-means from the tenant's previous (centers, influence);
+* **cold** — ``cache_slots=0``: the identical stream served with every
+  solve cold-started (fresh SFC bootstrap), the fair all-cold baseline.
+
+Reported (and gated by ``tools/bench_compare.py compare_serving`` against
+``benchmarks/baselines/BENCH_serving.json``):
+
+* ``iters_ratio`` — cold/warm mean movement iterations over the steady
+  state (steps >= 1); the acceptance claim is >= 3x.
+* ``warm_hit_rate`` — fraction of requests served from warm state
+  (steady state: (T-1)/T with a large-enough cache).
+* ``problems_per_s`` / ``p50_ms`` / ``p99_ms`` — serving throughput and
+  request latency over the post-compile steady state (wall-clock: soft
+  gates unless ``--gate-time``).
+* every request balanced, in both runs.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import meshes as MESH
+from repro.partition import PartitionProblem
+from repro.serve import PartitionServer, request_stream
+
+from .common import md_table, save_bench_json, save_json
+
+STEPS = {"quick": 8, "full": 12}
+# heterogeneous fleet: (n, k) per tenant, spanning two tiers and two k's
+# so the slot-bucket router actually multiplexes (quick: 2048/4096 caps)
+TENANTS = {
+    "quick": [(1800, 8), (2048, 8), (3500, 16), (4000, 16)],
+    "full": [(7000, 16), (8192, 16), (14000, 32), (16000, 32)],
+}
+TIERS = {"quick": (1024, 2048, 4096), "full": (2048, 4096, 8192, 16384)}
+SLOTS = 2
+WARMUP_STEPS = 2     # step 0 compiles cold buckets, step 1 warm buckets
+
+
+def _fleet(quick: bool) -> list[PartitionProblem]:
+    probs = []
+    for i, (n, k) in enumerate(TENANTS["quick" if quick else "full"]):
+        mesh = MESH.REGISTRY["delaunay2d"](n, seed=10 + i)
+        probs.append(PartitionProblem(points=mesh.points, k=k,
+                                      epsilon=0.03, seed=10 + i,
+                                      name=mesh.name))
+    return probs
+
+
+def _run_mode(problems, workload, steps: int, tiers, *,
+              cache_slots: int) -> dict:
+    server = PartitionServer(tiers=tiers, slots=SLOTS,
+                             cache_slots=cache_slots)
+    per_step = []
+    for t, batch in enumerate(request_stream(problems, workload, steps)):
+        t0 = time.perf_counter()
+        responses = server.serve(batch)
+        dt = time.perf_counter() - t0
+        per_step.append({
+            "step": t,
+            "requests": len(responses),
+            "warm_hits": sum(r.warm for r in responses),
+            "mean_iters": float(np.mean([r.iters for r in responses])),
+            "max_imbalance": float(max(r.imbalance for r in responses)),
+            "all_balanced": bool(all(r.balanced for r in responses)),
+            "latencies_s": [r.time_s for r in responses],
+            "step_time_s": dt,
+        })
+    return {"per_step": per_step, "server_stats": dict(server.stats)}
+
+
+def _summarize(warm: dict, cold: dict, steps: int) -> dict:
+    wsteps, csteps = warm["per_step"], cold["per_step"]
+    steady_w = [r for r in wsteps if r["step"] >= 1]
+    steady_c = [r for r in csteps if r["step"] >= 1]
+    warm_iters = float(np.mean([r["mean_iters"] for r in steady_w]))
+    cold_iters = float(np.mean([r["mean_iters"] for r in steady_c]))
+    total_req = sum(r["requests"] for r in wsteps)
+    # latency/throughput over the post-compile steady state only
+    measured = [r for r in wsteps if r["step"] >= WARMUP_STEPS]
+    lats = np.asarray([lat for r in measured for lat in r["latencies_s"]])
+    wall = float(sum(r["step_time_s"] for r in measured))
+    n_meas = int(sum(r["requests"] for r in measured))
+    return {
+        "iters_ratio": cold_iters / max(warm_iters, 1e-9),
+        "warm_mean_iters": warm_iters,
+        "cold_mean_iters": cold_iters,
+        "warm_hit_rate": (sum(r["warm_hits"] for r in wsteps)
+                          / max(total_req, 1)),
+        "warm_all_balanced": bool(all(r["all_balanced"] for r in wsteps)),
+        "cold_all_balanced": bool(all(r["all_balanced"] for r in csteps)),
+        "problems_per_s": n_meas / max(wall, 1e-9),
+        "p50_ms": float(np.percentile(lats, 50) * 1e3),
+        "p99_ms": float(np.percentile(lats, 99) * 1e3),
+        "measured_steps": len(measured),
+        "requests_measured": n_meas,
+        "requests_total": total_req,
+    }
+
+
+def run(quick: bool = False, json_out: bool = False):
+    cfg_key = "quick" if quick else "full"
+    steps = STEPS[cfg_key]
+    tiers = TIERS[cfg_key]
+    problems = _fleet(quick)
+    workload = MESH.WORKLOADS["drifting_hotspot"]()
+
+    print(f"\n### Partition serving — {len(problems)} tenants x "
+          f"{steps} steps, tiers={tiers}, slots={SLOTS} "
+          f"(warm slot cache vs all-cold serving)\n")
+    warm = _run_mode(problems, workload, steps, tiers,
+                     cache_slots=len(problems))
+    cold = _run_mode(problems, workload, steps, tiers, cache_slots=0)
+
+    for mode, run_ in (("warm", warm), ("cold", cold)):
+        print(f"-- {mode}")
+        print(md_table(run_["per_step"],
+                       ["step", "requests", "warm_hits", "mean_iters",
+                        "max_imbalance", "step_time_s"]))
+        print()
+
+    summary = _summarize(warm, cold, steps)
+    print(f"cold/warm mean iters: {summary['cold_mean_iters']:.2f} / "
+          f"{summary['warm_mean_iters']:.2f}  (ratio = "
+          f"{summary['iters_ratio']:.1f}x, claim >= 3x)")
+    print(f"warm-hit rate: {summary['warm_hit_rate']:.3f}  "
+          f"(steady-state bound {(steps - 1) / steps:.3f})")
+    print(f"throughput: {summary['problems_per_s']:.2f} problems/s, "
+          f"p50 {summary['p50_ms']:.1f} ms, p99 {summary['p99_ms']:.1f} ms "
+          f"over {summary['requests_measured']} steady-state requests")
+
+    # per-step latency lists are for local inspection only — keep the
+    # regression file schema-stable and small
+    for run_ in (warm, cold):
+        for r in run_["per_step"]:
+            r.pop("latencies_s", None)
+    out = {
+        "quick": quick, "steps": steps, "slots": SLOTS,
+        "tiers": list(tiers),
+        "workload": "drifting_hotspot",
+        "tenants": [{"tenant": i, "n": p.n, "k": p.k}
+                    for i, p in enumerate(problems)],
+        "warm": warm, "cold": cold, "summary": summary,
+    }
+    save_json("serving", out)
+    if json_out:
+        save_bench_json("serving", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

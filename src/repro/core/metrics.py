@@ -105,6 +105,63 @@ def retained_fraction(prev: np.ndarray, new: np.ndarray,
     return 1.0 - migration_fraction(prev, new, weights)
 
 
+def batch_imbalance(labels, k: int, weights):
+    """Per-slot imbalance on a padded slot batch (the serving layer's
+    metric): ``max_b W_b / (W/k) - 1`` for every slot independently.
+
+    Padded entries carry weight 0 (the engine-wide padding discipline:
+    replicated real points, zero weight) so they drop out of both the
+    block weights and the per-slot total exactly.
+
+    Args:
+        labels:  [S, cap] block ids in [0, k) (padding rows may repeat
+            real labels — their zero weight silences them).
+        k:       number of blocks (shared by every slot in the bucket).
+        weights: [S, cap] nonneg node weights, 0 on padded entries.
+
+    Returns:
+        [S] per-slot imbalance (numpy on host inputs, traced in-graph).
+    """
+    xp = _array_ns(labels, weights)
+    if xp is np:
+        lab = np.asarray(labels)
+        w = np.asarray(weights, np.float64)
+        out = np.empty(lab.shape[0])
+        for s in range(lab.shape[0]):
+            sizes = np.bincount(lab[s], weights=w[s], minlength=k)
+            out[s] = sizes.max() / max(w[s].sum() / k, 1e-12) - 1.0
+        return out
+    import jax
+    import jax.numpy as jnp
+
+    def one(lab, w):
+        sizes = jnp.zeros(k, w.dtype).at[lab].add(w)
+        target = jnp.sum(w) / k
+        return jnp.max(sizes) / jnp.maximum(target, 1e-12) - 1.0
+
+    return jax.vmap(one)(xp.asarray(labels), xp.asarray(weights))
+
+
+def batch_migration_fraction(prev, new, weights):
+    """Per-slot migration fraction on a padded slot batch: the fraction
+    of each slot's weight that changed blocks between ``prev`` and
+    ``new``. Padded entries (weight 0) drop out exactly.
+
+    Args:
+        prev:    [S, cap] previous block ids.
+        new:     [S, cap] new block ids (same padded point order).
+        weights: [S, cap] nonneg node weights, 0 on padded entries.
+
+    Returns:
+        [S] per-slot fraction in [0, 1] (numpy on host, traced in-graph).
+    """
+    xp = _array_ns(prev, new, weights)
+    prev, new = xp.asarray(prev), xp.asarray(new)
+    w = xp.asarray(weights)
+    moved = xp.sum(xp.where(prev != new, w, 0.0), axis=1)
+    return moved / xp.maximum(xp.sum(w, axis=1), 1e-12)
+
+
 def edge_cut(part: np.ndarray, indptr: np.ndarray, indices: np.ndarray) -> int:
     src = np.repeat(np.arange(len(indptr) - 1), np.diff(indptr))
     return int((part[src] != part[indices]).sum() // 2)

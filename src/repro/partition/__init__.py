@@ -6,8 +6,8 @@ vmap execution, a sharded multi-device (shard_map) path via
 migration accounting). See DESIGN.md §Partition-engine / §3b / §8.
 """
 from . import algorithms  # noqa: F401  (populates the registry on import)
-from .batched import (batched_balanced_kmeans, build_refinement_batch,
-                      sequential_balanced_kmeans)
+from .batched import (batched_balanced_kmeans, bucket_balanced_kmeans,
+                      build_refinement_batch, sequential_balanced_kmeans)
 from .distributed import (ShardedPartitionProblem, partition_sharded,
                           repartition_sharded)
 from .engine import partition
@@ -18,14 +18,15 @@ from .registry import (UnknownMethodError, available_methods,
                        register_algorithm, resolve_method,
                        supports_devices, supports_warm_start,
                        warm_start_methods)
-from .repartition import (greedy_center_match, repartition,
+from .repartition import (WarmState, greedy_center_match, repartition,
                           weighted_centroids)
 
 __all__ = [
     "PartitionProblem", "PartitionResult", "partition", "repartition",
+    "WarmState",
     "hierarchical_partition", "factor_k",
     "batched_balanced_kmeans", "sequential_balanced_kmeans",
-    "build_refinement_batch",
+    "bucket_balanced_kmeans", "build_refinement_batch",
     "ShardedPartitionProblem", "partition_sharded", "repartition_sharded",
     "greedy_center_match", "weighted_centroids",
     "register_algorithm", "get_algorithm", "available_methods",

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import metrics
 from repro.core.balanced_kmeans import BKMConfig, balanced_kmeans
 
 
@@ -80,6 +81,117 @@ def sequential_balanced_kmeans(points, weights, centers0, cfg: BKMConfig,
     C = jnp.stack([o[1] for o in outs])
     infl = jnp.stack([o[2] for o in outs])
     stats = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[3] for o in outs])
+    return A, C, infl, stats
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "warm"))
+def _bucket_jit(points, weights, centers0, influence0, prev_assignment,
+                target_weight, cfg: BKMConfig, warm: bool):
+    if warm:
+        def one(p, w, c0, i0, pa, tw):
+            return balanced_kmeans(p, cfg, w, c0, target_weight=tw,
+                                   influence0=i0, warm_start=True,
+                                   prev_assignment=pa)
+        A, C, infl, stats = jax.vmap(one)(points, weights, centers0,
+                                          influence0, prev_assignment,
+                                          target_weight)
+    else:
+        def one(p, w, c0, tw):
+            return balanced_kmeans(p, cfg, w, c0, target_weight=tw)
+        A, C, infl, stats = jax.vmap(one)(points, weights, centers0,
+                                          target_weight)
+    # per-slot request metrics ride in the same dispatch: imbalance on the
+    # padded batch always, migration vs the warm-start assignment when warm
+    stats = dict(stats)
+    stats["imbalance"] = metrics.batch_imbalance(A, cfg.k, weights)
+    if warm:
+        stats["migration_fraction"] = metrics.batch_migration_fraction(
+            prev_assignment, A, weights)
+    return A, C, infl, stats
+
+
+def bucket_balanced_kmeans(points, weights, centers0, cfg: BKMConfig, *,
+                           counts=None, valid=None, target_weight=None,
+                           influence0=None, prev_assignment=None,
+                           warm: bool = False):
+    """Solve one serving *bucket* — S fixed slots padded to a common point
+    cap — in a single jitted vmap dispatch.
+
+    This is the static-shape entry the multi-tenant ``PartitionServer``
+    (repro.serve) drives: every slot is an independent subproblem padded
+    with *copies of its own real points at weight zero* (the engine-wide
+    padding discipline — bounding boxes stay tight, weighted sums are
+    exact), and slots past the end of a request group are filler copies
+    flagged invalid.
+
+    Args:
+        points:   [S, cap, d] padded per-slot coordinates.
+        weights:  [S, cap] weights, 0 on padded entries (None = ones; only
+            meaningful when every slot is full, i.e. counts == cap).
+        centers0: [S, k, d] initial centers (SFC bootstrap for cold slots,
+            cached warm centers for warm slots).
+        cfg: shared ``BKMConfig`` (k/epsilon static across the bucket).
+        counts:   optional [S] real point counts per slot (<= cap),
+            recorded in ``stats["counts"]``.
+        valid:    optional [S] bool slot-validity mask (False = filler
+            slot whose outputs must be discarded), recorded in
+            ``stats["valid"]``.
+        target_weight: scalar or [S] balance target override.
+        influence0: [S, k] warm influence (warm only; None = ones).
+        prev_assignment: [S, cap] int32 previous labels in the padded
+            order (warm only; enables no-op detection per slot).
+        warm: resume every slot from (centers0, influence0) with
+            ``warm_start=True`` instead of cold-starting.
+
+    Returns:
+        (labels [S, cap] int32, centers [S, k, d], influence [S, k],
+        stats) — ``stats`` carries the solver pytree with a leading slot
+        axis plus ``"imbalance"`` [S] (and ``"migration_fraction"`` [S]
+        when warm) computed in-graph on the padded batch, and the
+        host-side ``"counts"`` / ``"valid"`` passthroughs.
+
+    Raises:
+        ValueError: shape mismatches, counts exceeding the cap, or warm
+            state missing/present on the wrong path.
+    """
+    pts, w, c0, tw = _prep(points, weights, centers0, cfg, target_weight)
+    S, cap, _ = pts.shape
+    if counts is not None:
+        counts = np.asarray(counts)
+        if counts.shape != (S,):
+            raise ValueError(f"counts must be [{S}], got {counts.shape}")
+        if counts.max() > cap or counts.min() < 1:
+            raise ValueError(f"counts must lie in [1, cap={cap}], got "
+                             f"range [{counts.min()}, {counts.max()}]")
+    if valid is not None:
+        valid = np.asarray(valid, bool)
+        if valid.shape != (S,):
+            raise ValueError(f"valid must be [{S}], got {valid.shape}")
+    if warm:
+        if influence0 is None:
+            influence0 = jnp.ones((S, cfg.k), cfg.dtype)
+        else:
+            influence0 = jnp.asarray(influence0, cfg.dtype)
+        if prev_assignment is None:
+            raise ValueError("warm bucket solves need prev_assignment "
+                             "(the [S, cap] warm-start labels)")
+        prev_assignment = jnp.asarray(prev_assignment, jnp.int32)
+        if influence0.shape != (S, cfg.k):
+            raise ValueError(f"influence0 must be [{S}, {cfg.k}], got "
+                             f"{influence0.shape}")
+        if prev_assignment.shape != (S, cap):
+            raise ValueError(f"prev_assignment must be [{S}, {cap}], got "
+                             f"{prev_assignment.shape}")
+    elif influence0 is not None or prev_assignment is not None:
+        raise ValueError("influence0/prev_assignment are warm-start "
+                         "state; pass warm=True")
+    A, C, infl, stats = _bucket_jit(pts, w, c0, influence0,
+                                    prev_assignment, tw, cfg, warm)
+    stats = dict(stats)
+    if counts is not None:
+        stats["counts"] = counts
+    if valid is not None:
+        stats["valid"] = valid
     return A, C, infl, stats
 
 

@@ -25,6 +25,8 @@ migration is measured fairly for every method.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import numpy as np
 
 from repro.core import metrics
@@ -45,6 +47,82 @@ WARM_DELTA_TOL = 5e-3
 # from its own output state (the pre-pass detects the imbalance and forces
 # the movement loop to run again) at most this many times.
 MAX_BALANCE_RETRIES = 2
+
+
+@dataclass
+class WarmState:
+    """The portable warm-start state of a balanced-k-means partition.
+
+    Everything ``balanced_kmeans(warm_start=True)`` resumes from, bundled
+    so callers other than ``repartition()`` — the slot cache of
+    ``repro.serve.PartitionServer`` in particular — can capture, hold and
+    restore warm state without carrying a full ``PartitionResult``:
+
+    Attributes:
+        centers:   [k, d] final centers of the producing solve.
+        influence: [k] final influence (paper Eq. 1 state), or None for
+            all-ones.
+        labels:    [n] block ids in the *original* point order (the
+            ``prev_assignment`` fed to no-op detection).
+    """
+    centers: np.ndarray
+    influence: np.ndarray | None
+    labels: np.ndarray
+
+    def __post_init__(self):
+        self.centers = np.asarray(self.centers)
+        self.labels = np.asarray(self.labels)
+        if self.influence is not None:
+            self.influence = np.asarray(self.influence)
+        if self.centers.ndim != 2:
+            raise ValueError(f"centers must be [k, d], "
+                             f"got {self.centers.shape}")
+        if (self.influence is not None
+                and self.influence.shape != (self.centers.shape[0],)):
+            raise ValueError(
+                f"influence shape {self.influence.shape} does not match "
+                f"k={self.centers.shape[0]}")
+
+    @property
+    def n(self) -> int:
+        return self.labels.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.centers.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.centers.shape[1]
+
+    @classmethod
+    def capture(cls, result: PartitionResult) -> "WarmState":
+        """Extract the warm-start state from a ``PartitionResult``.
+
+        Raises:
+            ValueError: the result carries no centers (produced by a
+                method without warm-start state, e.g. sfc/rcb).
+        """
+        if result.centers is None:
+            raise ValueError(
+                "result carries no centers to warm-start from (was it "
+                "produced by a center-based method?)")
+        infl = (None if result.influence is None
+                else np.asarray(result.influence))
+        return cls(centers=np.asarray(result.centers), influence=infl,
+                   labels=np.asarray(result.labels))
+
+    def compatible_with(self, n: int, k: int) -> bool:
+        """True when this state can warm-start an (n, k) instance — the
+        slot-cache invalidation predicate: a tenant that changed its
+        point count or block count must cold-start."""
+        return self.n == n and self.k == k
+
+    def influence_or_ones(self) -> np.ndarray:
+        """[k] influence, defaulting to all-ones (the solver's default)."""
+        if self.influence is None:
+            return np.ones(self.k)
+        return self.influence
 
 
 def weighted_centroids(points: np.ndarray, labels: np.ndarray, k: int,
@@ -141,10 +219,9 @@ def _warm_geographer(problem: PartitionProblem, previous: PartitionResult,
     from .distributed import repartition_sharded
     opts.setdefault("delta_tol", WARM_DELTA_TOL)
     opts["warmup"] = False
-    centers = np.asarray(previous.centers)
-    infl = (None if previous.influence is None
-            else np.asarray(previous.influence))
-    prev_labels = np.asarray(previous.labels)
+    state = WarmState.capture(previous)
+    centers, infl = state.centers, state.influence
+    prev_labels = state.labels
     # the solver balances against the caller's effective epsilon (an
     # opts override wins over the problem's), so the retry check must too
     eps_eff = opts.get("epsilon", problem.epsilon)

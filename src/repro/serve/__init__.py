@@ -1,1 +1,10 @@
 from .engine import make_serve_step, ServeEngine, Request
+from .partition_server import (DEFAULT_TIERS, PartitionRequest,
+                               PartitionResponse, PartitionServer,
+                               request_stream)
+
+__all__ = [
+    "make_serve_step", "ServeEngine", "Request",
+    "PartitionServer", "PartitionRequest", "PartitionResponse",
+    "DEFAULT_TIERS", "request_stream",
+]

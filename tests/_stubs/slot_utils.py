@@ -1,0 +1,84 @@
+"""Shared slot/mask test utilities for the fixed-slot serving layers.
+
+Both serving test suites exercise the same static-shape discipline —
+``ServeEngine`` right-pads variable-length prompts into fixed decode
+slots, ``PartitionServer`` cycle-pads variable-size point clouds into
+fixed bucket slots — and used to re-implement the padding/mask helpers
+inline. They live here (tests/_stubs is appended to ``sys.path`` by
+tests/conftest.py) so every serving test builds its expected padded
+batches through one implementation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pad_rows(rows, pad_value=0, dtype=np.int32):
+    """Right-pad variable-length 1-D rows into a dense [B, Lmax] batch.
+
+    The ``ServeEngine`` prompt-slot discipline: every row starts at
+    position 0, shorter rows are filled with ``pad_value`` and masked.
+
+    Returns:
+        (arr [B, Lmax], valid [B, Lmax] bool) — ``valid[i, j]`` is True
+        where ``arr[i, j]`` is real data.
+    """
+    rows = [np.asarray(r) for r in rows]
+    if not rows:
+        raise ValueError("need at least one row")
+    lmax = max(len(r) for r in rows)
+    arr = np.full((len(rows), lmax), pad_value, dtype)
+    valid = np.zeros((len(rows), lmax), bool)
+    for i, r in enumerate(rows):
+        arr[i, :len(r)] = r
+        valid[i, :len(r)] = True
+    return arr, valid
+
+
+def cycle_pad(points, cap, weights=None, perm=None):
+    """Pad one point cloud to ``cap`` slots by cycling its (optionally
+    permuted) real points at weight zero — the engine-wide padding
+    discipline (``partition.batched`` / ``PartitionServer``): bounding
+    boxes stay tight, weighted sums are exact.
+
+    Args:
+        points:  [n, d] coordinates, n <= cap.
+        cap:     target padded length.
+        weights: [n] weights or None (= ones).
+        perm:    optional [n] permutation applied before cycling (the
+            request-seed permutation the server uses).
+
+    Returns:
+        (pts [cap, d], w [cap], valid [cap] bool) — ``w`` is 0 and
+        ``valid`` False on the padded tail.
+    """
+    points = np.asarray(points)
+    n = points.shape[0]
+    if n > cap:
+        raise ValueError(f"n={n} exceeds cap={cap}")
+    if perm is None:
+        perm = np.arange(n)
+    idx = np.asarray(perm)[np.arange(cap) % n]
+    valid = np.arange(cap) < n
+    w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
+    return points[idx], np.where(valid, w[idx], 0.0), valid
+
+
+def fill_slots(items, slots, filler=None):
+    """Top a short group up to a fixed slot count — the bucket-admission
+    discipline shared by both serving engines.
+
+    Args:
+        items:  the real group (1 <= len <= slots).
+        slots:  fixed lane count.
+        filler: value for the padded lanes (default: ``items[0]``, the
+            PartitionServer convention).
+
+    Returns:
+        (padded list of length ``slots``, valid [slots] bool).
+    """
+    if not (1 <= len(items) <= slots):
+        raise ValueError(f"group size {len(items)} not in [1, {slots}]")
+    filler = items[0] if filler is None else filler
+    padded = list(items) + [filler] * (slots - len(items))
+    return padded, np.arange(slots) < len(items)

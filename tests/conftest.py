@@ -11,12 +11,11 @@ from repro.envflags import force_virtual_devices  # noqa: E402
 
 force_virtual_devices(8)
 
-try:
-    import hypothesis  # noqa: F401
-except ImportError:
-    # minimal container: fall back to the deterministic fixed-example stub
-    # (see requirements-dev.txt for the real thing)
-    sys.path.append(os.path.join(os.path.dirname(__file__), "_stubs"))
+# tests/_stubs also hosts the shared slot/mask test utilities
+# (slot_utils) used by the serving test suites, and the deterministic
+# hypothesis fallback package. Appending (not prepending) keeps a real
+# installed hypothesis winning over the stub.
+sys.path.append(os.path.join(os.path.dirname(__file__), "_stubs"))
 
 import numpy as np
 import pytest

@@ -1,0 +1,372 @@
+"""PartitionServer: slot-bucket admission, warm-state cache semantics,
+per-request metrics, determinism, and the serving gate."""
+import numpy as np
+import pytest
+from slot_utils import cycle_pad, fill_slots
+
+from repro.core import metrics
+from repro.core.balanced_kmeans import BKMConfig
+from repro.partition import (PartitionProblem, WarmState,
+                             bucket_balanced_kmeans, partition, repartition)
+from repro.serve import (PartitionRequest, PartitionServer, request_stream)
+
+# one shared shape family (cap 256, k 4, d 2) so the bucket trace compiles
+# once and is reused across the module
+TIERS = (256,)
+K = 4
+
+
+def _pts(n, seed=0):
+    return np.random.default_rng(seed).uniform(0, 1, (n, 2))
+
+
+def _server(**kw):
+    kw.setdefault("tiers", TIERS)
+    kw.setdefault("slots", 2)
+    kw.setdefault("cache_slots", 8)
+    return PartitionServer(**kw)
+
+
+def _req(tenant, n=256, k=K, seed=None, weights=None):
+    seed = (abs(hash(tenant)) % 1000) if seed is None else seed
+    return PartitionRequest(tenant=tenant, points=_pts(n, seed), k=k,
+                            weights=weights, seed=seed)
+
+
+# -- admission / validation ------------------------------------------------
+
+def test_empty_queue_step_is_noop():
+    server = _server()
+    assert server.step() == []
+    assert server.pending() == 0
+    assert server.stats["dispatches"] == 0
+
+
+def test_oversized_request_clear_error():
+    server = _server()
+    with pytest.raises(ValueError, match="exceeds the largest tier"):
+        server.submit(_req("big", n=300))
+    assert server.pending() == 0      # rejected at the front door
+
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="points must be"):
+        PartitionRequest(tenant="a", points=np.zeros(5), k=2)
+    with pytest.raises(ValueError, match="out of range"):
+        PartitionRequest(tenant="a", points=_pts(8), k=9)
+    with pytest.raises(ValueError, match="weights must be"):
+        PartitionRequest(tenant="a", points=_pts(8), k=2,
+                         weights=np.ones(7))
+    with pytest.raises(TypeError, match="unknown BKMConfig"):
+        PartitionServer(tiers=TIERS, nonsense=1)
+    with pytest.raises(TypeError, match="per-request state"):
+        PartitionServer(tiers=TIERS, epsilon=0.1)
+    with pytest.raises(ValueError, match="powers of two"):
+        PartitionServer(tiers=(100,))
+
+
+def test_tier_router_picks_smallest_fit():
+    server = PartitionServer(tiers=(256, 512, 1024))
+    assert server.tier_for(200) == 256
+    assert server.tier_for(256) == 256
+    assert server.tier_for(257) == 512
+    assert server.tier_for(1024) == 1024
+
+
+# -- solve correctness -----------------------------------------------------
+
+def test_cold_solve_matches_partition_at_cap():
+    """A full-tier request is bit-for-bit the engine's geographer path
+    (same seed permutation, same SFC bootstrap, vmap == single solve)."""
+    pts = _pts(256, seed=3)
+    [resp] = _server().serve(
+        [PartitionRequest(tenant="t", points=pts, k=K, seed=3)])
+    ref = partition(PartitionProblem(points=pts, k=K, seed=3),
+                    method="geographer")
+    assert np.array_equal(resp.labels, np.asarray(ref.labels))
+    assert not resp.warm and resp.balanced
+    assert resp.imbalance == pytest.approx(ref.imbalance(), abs=1e-5)
+
+
+def test_warm_hit_matches_repartition():
+    pts = _pts(256, seed=3)
+    w = 1.0 + 6 * np.exp(-np.sum((pts - 0.3) ** 2, axis=1) / 0.03)
+    server = _server()
+    [r0] = server.serve(
+        [PartitionRequest(tenant="t", points=pts, k=K, seed=3)])
+    [r1] = server.serve(
+        [PartitionRequest(tenant="t", points=pts, k=K, weights=w, seed=3)])
+    assert r1.warm and server.stats["warm_hits"] == 1
+
+    prob0 = PartitionProblem(points=pts, k=K, seed=3)
+    prev = partition(prob0, method="geographer")
+    ref = repartition(prob0.replace(weights=w), prev)
+    assert np.array_equal(r1.labels, np.asarray(ref.labels))
+    assert r1.iters == ref.stats["iters"]
+    assert r1.migration_fraction == pytest.approx(
+        ref.stats["migration"]["fraction"], abs=1e-6)
+
+
+def test_padded_slot_is_balanced_and_valid():
+    [resp] = _server().serve([_req("small", n=180)])
+    assert resp.labels.shape == (180,)
+    assert set(np.unique(resp.labels)) <= set(range(K))
+    assert resp.balanced
+    assert resp.tier == 256
+
+
+def test_heterogeneous_batch_one_step():
+    """Mixed n under one (cap, k): grouped into one bucket, one filler
+    lane; every response correct for its own request."""
+    server = _server(slots=4)
+    reqs = [_req("a", n=256, seed=1), _req("b", n=200, seed=2),
+            _req("c", n=180, seed=3)]
+    out = server.serve(reqs)
+    assert [r.tenant for r in out] == ["a", "b", "c"]
+    assert server.stats["dispatches"] == 1
+    assert server.stats["filler_slots"] == 1
+    for r, req in zip(out, reqs):
+        assert r.labels.shape == (req.n,)
+        assert r.balanced
+
+
+# -- warm cache semantics --------------------------------------------------
+
+def test_warm_state_invalidated_on_n_change():
+    server = _server()
+    server.serve([_req("t", n=200, seed=1)])
+    [resp] = server.serve([_req("t", n=210, seed=1)])
+    assert not resp.warm
+    assert server.stats["invalidations"] == 1
+    # the new shape's solve re-populates the cache
+    [resp2] = server.serve([_req("t", n=210, seed=1)])
+    assert resp2.warm
+
+
+def test_warm_state_invalidated_on_k_change():
+    server = _server()
+    server.serve([_req("t", n=64, k=4, seed=1)])
+    [resp] = server.serve([_req("t", n=64, k=8, seed=1)])
+    assert not resp.warm
+    assert server.stats["invalidations"] == 1
+
+
+def test_lru_eviction_and_refill_ordering():
+    server = _server(cache_slots=2)
+    server.serve([_req("a"), _req("b")])
+    assert server.cached_tenants() == ["a", "b"]
+    server.serve([_req("a")])                 # touch a -> LRU order [b, a]
+    assert server.cached_tenants() == ["b", "a"]
+    server.serve([_req("c")])                 # evicts b (least recent)
+    assert server.cached_tenants() == ["a", "c"]
+    assert server.stats["evictions"] == 1
+    [rb] = server.serve([_req("b")])          # b refills cold, evicts a
+    assert not rb.warm
+    assert server.cached_tenants() == ["c", "b"]
+
+
+def test_cache_disabled_serves_all_cold():
+    server = _server(cache_slots=0)
+    server.serve([_req("t")])
+    [resp] = server.serve([_req("t")])
+    assert not resp.warm
+    assert server.stats["warm_hits"] == 0
+    assert server.cached_tenants() == []
+
+
+# -- determinism -----------------------------------------------------------
+
+def test_stream_determinism_under_interleaving():
+    """Same request stream => identical labels, independent of admission
+    order and bucket packing (each slot is an independent vmap lane)."""
+    def stream(order):
+        server = _server(slots=2)
+        reqs0 = [_req(t, n=200 + 10 * i, seed=i)
+                 for i, t in enumerate("abcd")]
+        out = {}
+        for r in server.serve([reqs0[i] for i in order]):
+            out[(0, r.tenant)] = r.labels
+        reqs1 = [_req(t, n=200 + 10 * i, seed=i,
+                      weights=1.0 + np.linspace(0, 5, 200 + 10 * i))
+                 for i, t in enumerate("abcd")]
+        for r in server.serve([reqs1[i] for i in reversed(order)]):
+            out[(1, r.tenant)] = r.labels
+        return out
+
+    a = stream([0, 1, 2, 3])
+    b = stream([2, 0, 3, 1])
+    assert a.keys() == b.keys()
+    for key in a:
+        assert np.array_equal(a[key], b[key]), key
+
+
+# -- bucket entry + padded-batch metrics -----------------------------------
+
+def test_bucket_entry_error_paths():
+    pts = np.stack([_pts(64, 1), _pts(64, 2)])
+    w = np.ones((2, 64))
+    c0 = np.stack([pts[0][:4], pts[1][:4]])
+    cfg = BKMConfig(k=4)
+    with pytest.raises(ValueError, match="prev_assignment"):
+        bucket_balanced_kmeans(pts, w, c0, cfg, warm=True)
+    with pytest.raises(ValueError, match="warm=True"):
+        bucket_balanced_kmeans(pts, w, c0, cfg,
+                               prev_assignment=np.zeros((2, 64), np.int32))
+    with pytest.raises(ValueError, match="counts"):
+        bucket_balanced_kmeans(pts, w, c0, cfg, counts=[64, 65])
+    with pytest.raises(ValueError, match="valid"):
+        bucket_balanced_kmeans(pts, w, c0, cfg, valid=[True])
+
+
+def test_bucket_stats_match_host_metrics():
+    """The in-graph padded-batch metrics equal the host metrics computed
+    per unpadded slot."""
+    rng = np.random.default_rng(0)
+    caps, n0, n1 = 64, 64, 50
+    p0, w0, _ = cycle_pad(_pts(n0, 1), caps, weights=1 + rng.random(n0))
+    p1, w1, _ = cycle_pad(_pts(n1, 2), caps, weights=1 + rng.random(n1))
+    pts, w = np.stack([p0, p1]), np.stack([w0, w1])
+    c0 = np.stack([p0[:4], p1[:4]])
+    cfg = BKMConfig(k=4)
+    A, C, infl, stats = bucket_balanced_kmeans(
+        pts, w, c0, cfg, counts=[n0, n1], valid=[True, True])
+    assert np.array_equal(stats["counts"], [n0, n1])
+    for s, n in ((0, n0), (1, n1)):
+        host = metrics.imbalance(np.asarray(A[s][:n]), 4, w[s][:n])
+        assert float(stats["imbalance"][s]) == pytest.approx(host, abs=1e-5)
+    # warm re-solve from the converged state: migration vs prev in-graph
+    A2, _, _, st2 = bucket_balanced_kmeans(
+        pts, w, np.asarray(C), cfg, warm=True,
+        influence0=np.asarray(infl), prev_assignment=np.asarray(A))
+    for s in (0, 1):
+        host = metrics.migration_fraction(np.asarray(A[s]),
+                                          np.asarray(A2[s]), w[s])
+        assert float(st2["migration_fraction"][s]) == pytest.approx(
+            float(host), abs=1e-6)
+
+
+def test_batch_metrics_host_equals_jnp():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    lab = rng.integers(0, 4, (3, 32))
+    prev = rng.integers(0, 4, (3, 32))
+    w = np.where(np.arange(32) < 28, 1 + rng.random((3, 32)), 0.0)
+    np.testing.assert_allclose(
+        metrics.batch_imbalance(lab, 4, w),
+        np.asarray(metrics.batch_imbalance(jnp.asarray(lab), 4,
+                                           jnp.asarray(w))), rtol=1e-5)
+    np.testing.assert_allclose(
+        metrics.batch_migration_fraction(prev, lab, w),
+        np.asarray(metrics.batch_migration_fraction(
+            jnp.asarray(prev), jnp.asarray(lab), jnp.asarray(w))),
+        rtol=1e-6)
+
+
+def test_cycle_pad_matches_server_prep():
+    """The shared test helper reproduces the server's slot prep exactly."""
+    pts = _pts(50, seed=7)
+    perm = np.random.default_rng(9).permutation(50)
+    padded, w, valid = cycle_pad(pts, 64, perm=perm)
+    req = PartitionRequest(tenant="x", points=pts, k=4, seed=9)
+    server = _server(tiers=(64,))
+    _, spts, sw, _, _, _ = server._prep_slot(req, 64, None)
+    np.testing.assert_array_equal(padded, spts)
+    np.testing.assert_array_equal(w, sw)
+    assert valid.sum() == 50
+
+
+def test_warm_state_capture_and_compat():
+    pts = _pts(128, seed=4)
+    res = partition(PartitionProblem(points=pts, k=4, seed=4),
+                    method="geographer")
+    state = WarmState.capture(res)
+    assert state.n == 128 and state.k == 4 and state.dim == 2
+    assert state.compatible_with(128, 4)
+    assert not state.compatible_with(128, 8)
+    assert not state.compatible_with(127, 4)
+    sfc = partition(PartitionProblem(points=pts, k=4), method="sfc")
+    with pytest.raises(ValueError, match="no centers"):
+        WarmState.capture(sfc)
+
+
+def test_fill_slots_helper():
+    padded, valid = fill_slots(["a"], 3)
+    assert padded == ["a", "a", "a"]
+    assert list(valid) == [True, False, False]
+    with pytest.raises(ValueError):
+        fill_slots([], 3)
+
+
+def test_request_stream_generator():
+    from repro.core.meshes import WORKLOADS
+    probs = [PartitionProblem(points=_pts(40, i), k=2, seed=i)
+             for i in range(2)]
+    steps = list(request_stream(probs, WORKLOADS["drifting_hotspot"](), 3))
+    assert len(steps) == 3 and all(len(b) == 2 for b in steps)
+    # weights drift, identity stays fixed
+    assert not np.array_equal(steps[0][0].weights, steps[2][0].weights)
+    assert steps[0][1].tenant == steps[2][1].tenant == 1
+    assert np.array_equal(steps[0][0].points, steps[2][0].points)
+
+
+# -- the serving regression gate -------------------------------------------
+
+def _gate(cur, base=None, gate_time=False):
+    import os
+    import sys
+    tools = os.path.join(os.path.dirname(__file__), os.pardir, "tools")
+    if tools not in sys.path:
+        sys.path.insert(0, tools)
+    from bench_compare import Report, compare_serving
+    rep = Report()
+    compare_serving(base or cur, cur, rep, gate_time, 1.0)
+    return rep
+
+
+def _fake_serving(**over):
+    summary = {
+        "iters_ratio": 9.0, "warm_mean_iters": 2.5, "cold_mean_iters": 22.0,
+        "warm_hit_rate": 0.875, "warm_all_balanced": True,
+        "cold_all_balanced": True, "problems_per_s": 100.0, "p50_ms": 10.0,
+        "p99_ms": 40.0, "measured_steps": 6, "requests_measured": 24,
+        "requests_total": 32,
+    }
+    summary.update(over.pop("summary", {}))
+    out = {"quick": True, "steps": 8, "slots": 2, "tiers": [1024],
+           "workload": "drifting_hotspot",
+           "tenants": [{"tenant": 0, "n": 1800, "k": 8}],
+           "summary": summary}
+    out.update(over)
+    return out
+
+
+def test_gate_accepts_self_compare():
+    assert _gate(_fake_serving()).failures == []
+
+
+def test_gate_rejects_planted_regressions():
+    assert _gate(_fake_serving(summary={"iters_ratio": 2.0})).failures
+    assert _gate(_fake_serving(summary={"warm_hit_rate": 0.5})).failures
+    assert _gate(_fake_serving(summary={"cold_all_balanced": False})).failures
+    assert _gate(_fake_serving(steps=6), base=_fake_serving()).failures
+    missing = _fake_serving()
+    del missing["summary"]["p99_ms"]
+    assert _gate(missing).failures
+
+
+def test_gate_wall_clock_soft_unless_gate_time():
+    slow = _fake_serving(summary={"p99_ms": 400.0, "problems_per_s": 5.0})
+    rep = _gate(slow, base=_fake_serving())
+    assert rep.failures == [] and len(rep.rows) == 2   # warnings only
+    rep = _gate(slow, base=_fake_serving(), gate_time=True)
+    assert len(rep.failures) == 2
+
+
+def test_gate_accepts_checked_in_baseline():
+    import json
+    import os
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "benchmarks", "baselines", "BENCH_serving.json")
+    with open(path) as f:
+        base = json.load(f)
+    assert _gate(base).failures == []

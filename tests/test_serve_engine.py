@@ -3,6 +3,7 @@ manual decode loop."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+from slot_utils import pad_rows
 
 from repro import configs
 from repro.dist.rules import resolve_rules
@@ -71,6 +72,38 @@ def test_engine_greedy_parity_with_manual_loop():
         cur, cache, _ = step(params, cache, cur, jnp.int32(len(prompt) + t))
         manual.append(int(cur[0, 0]))
     assert req.out == manual
+
+
+def test_engine_matches_padded_slot_batch():
+    """Mixed-length prompts in one group equal a manual loop over the
+    pad_rows-built slot batch — the engine's prompt-slot discipline is
+    exactly the shared slot_utils padding (all rows share the step
+    position; short rows are pad-fed and transcribed from pmax on)."""
+    cfg, rules, params = _setup()
+    prompts = [np.asarray([1, 2, 3, 4, 5], np.int32),
+               np.asarray([9, 6], np.int32)]
+    max_new = 4
+    reqs = [Request(uid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+    engine = ServeEngine(cfg, rules, params, batch=2, max_seq=16)
+    engine.run(reqs)
+
+    toks, valid = pad_rows(prompts, pad_value=engine.pad_id)
+    assert valid.shape == toks.shape and valid[1, 2:].sum() == 0
+    step = jax.jit(make_serve_step(cfg, rules))
+    cache = M.init_cache(cfg, 2, 16, rules)
+    cur = None
+    for p in range(toks.shape[1]):
+        cur, cache, _ = step(params, cache,
+                             jnp.asarray(toks[:, p:p + 1]), jnp.int32(p))
+    manual = [[int(cur[i, 0])] for i in range(2)]
+    for t in range(max_new - 1):
+        cur, cache, _ = step(params, cache, cur,
+                             jnp.int32(toks.shape[1] + t))
+        for i in range(2):
+            manual[i].append(int(cur[i, 0]))
+    assert reqs[0].out == manual[0]
+    assert reqs[1].out == manual[1]
 
 
 def test_engine_eos_stops_row():

@@ -33,6 +33,13 @@ baselines and exits non-zero on a regression:
   (``iters_ratio >= 3``, ``migration_ratio <= 0.30``, every step of both
   runs balanced), and the warm run's mean iterations / mean migration
   fraction must not regress by more than ``--tolerance`` vs baseline.
+* serving (the multi-tenant PartitionServer stream): structural schema
+  check (config commensurability + every summary field present), the
+  absolute warm-path floors — cold/warm ``iters_ratio >= 3``,
+  ``warm_hit_rate >= 0.7`` (and no worse than 0.05 below baseline),
+  every request balanced in both runs — all hard; the throughput floor
+  (``problems_per_s``) and p99 latency ceiling are wall-clock-derived
+  and therefore soft unless ``--gate-time``.
 * experiments (the §5 comparison matrix): full method x mesh-zoo cell
   coverage, per-cell ``cut`` / ``totalCommVol`` / ``imbalance``
   regression vs baseline, every geographer cell balanced, and the
@@ -272,6 +279,61 @@ def compare_experiments(base, cur, tol: float, rep: Report):
                  f"the <= {TREND_RATIO_CEIL} paper-trend ceiling")
 
 
+# serving floors: the warm-hit steady state must need >= 3x fewer
+# movement iterations than all-cold serving (absolute claim, same-run
+# ratio — machine-speed-immune), and with a cache sized to the fleet the
+# hit rate is structural ((T-1)/T of requests warm), so 0.7 is a loose
+# absolute floor under any benchmarked T >= 4
+SERVING_ITERS_FLOOR = 3.0
+SERVING_HIT_RATE_FLOOR = 0.7
+SERVING_HIT_RATE_SLACK = 0.05      # vs baseline
+SERVING_SUMMARY_FIELDS = (
+    "iters_ratio", "warm_mean_iters", "cold_mean_iters", "warm_hit_rate",
+    "warm_all_balanced", "cold_all_balanced", "problems_per_s", "p50_ms",
+    "p99_ms", "measured_steps", "requests_measured", "requests_total")
+
+
+def compare_serving(base, cur, rep: Report, gate_time: bool,
+                    time_tol: float):
+    for fld in ("quick", "steps", "slots", "tiers", "workload", "tenants"):
+        rep.gate(base.get(fld) == cur.get(fld), f"serving.config.{fld}",
+                 "incommensurable runs (regenerate baselines with the "
+                 "same --quick setting): " + _fmt(cur.get(fld),
+                                                  base.get(fld)))
+    s = cur.get("summary", {})
+    for fld in SERVING_SUMMARY_FIELDS:
+        rep.gate(s.get(fld) is not None, f"serving.summary.{fld}",
+                 "schema field missing/null from the serving summary")
+    # absolute warm-path acceptance floors — hold regardless of baseline
+    rep.gate(s.get("iters_ratio", 0.0) >= SERVING_ITERS_FLOOR,
+             "serving.iters_ratio",
+             f"cold/warm iteration ratio {s.get('iters_ratio')} below "
+             f"the >= {SERVING_ITERS_FLOOR}x claim")
+    hit = s.get("warm_hit_rate", 0.0)
+    bs = base.get("summary", {})
+    rep.gate(hit >= SERVING_HIT_RATE_FLOOR, "serving.warm_hit_rate",
+             f"warm-hit rate {hit} below the absolute "
+             f">= {SERVING_HIT_RATE_FLOOR} floor")
+    if bs.get("warm_hit_rate") is not None:
+        rep.gate(hit >= bs["warm_hit_rate"] - SERVING_HIT_RATE_SLACK,
+                 "serving.warm_hit_rate_regression",
+                 _fmt(hit, bs.get("warm_hit_rate")))
+    for mode in ("warm", "cold"):
+        rep.gate(bool(s.get(f"{mode}_all_balanced", False)),
+                 f"serving.{mode}.balanced",
+                 "a request exceeded epsilon (see per_step max_imbalance)")
+    # wall-clock envelope: throughput floor + p99 ceiling vs baseline,
+    # soft on shared runners unless --gate-time
+    tput, btput = s.get("problems_per_s"), bs.get("problems_per_s")
+    if btput:
+        rep.gate(tput is not None and tput >= btput / (1.0 + time_tol),
+                 "serving.problems_per_s",
+                 f"throughput floor: {_fmt(tput, btput)}", hard=gate_time)
+    rep.gate(not _regressed(s.get("p99_ms"), bs.get("p99_ms"), time_tol),
+             "serving.p99_ms", _fmt(s.get("p99_ms"), bs.get("p99_ms")),
+             hard=gate_time)
+
+
 ITERS_RATIO_FLOOR = 3.0        # warm needs >= 3x fewer iterations
 MIGRATION_RATIO_CEIL = 0.30    # warm moves <= 30% of cold's weight
 
@@ -322,6 +384,9 @@ COMPARATORS = {
                                            a.gate_time, a.time_tolerance),
     "BENCH_repartition.json":
         lambda b, c, a, r: compare_repartition(b, c, a.tolerance, r),
+    "BENCH_serving.json":
+        lambda b, c, a, r: compare_serving(b, c, r, a.gate_time,
+                                           a.time_tolerance),
     "BENCH_experiments.json":
         lambda b, c, a, r: compare_experiments(b, c, a.tolerance, r),
 }
