@@ -12,7 +12,8 @@ from __future__ import annotations
 from .common import md_table, save_bench_json, save_json
 
 ROW_COLS = ["family", "graph", "tool", "cut", "maxCommVol", "totalCommVol",
-            "boundaryNodes", "imbalance", "time_partition_s", "time_eval_s"]
+            "boundaryNodes", "imbalance", "time_partition_s",
+            "time_refine_s", "time_eval_s"]
 
 
 def run(n: int = 20_000, k: int = 32, quick: bool = False,
@@ -42,6 +43,18 @@ def run(n: int = 20_000, k: int = 32, quick: bool = False,
     trend_rows = [dict({"tool": tool}, **ratios)
                   for tool, ratios in out["summary"]["geo_over_tool"].items()]
     print(md_table(trend_rows, ["tool", *CELL_METRICS]))
+    if out["summary"]["geo_refined_over_tool"]:
+        print("\n### Refined trend (refined geographer / unrefined tool, "
+              "geomean over the zoo — the tightened CI ceiling)\n")
+        rt_rows = [dict({"tool": tool}, **ratios) for tool, ratios
+                   in out["summary"]["geo_refined_over_tool"].items()]
+        print(md_table(rt_rows, ["tool", *CELL_METRICS]))
+    if out["summary"]["refined_over_unrefined"]:
+        print("\n### Refinement gain (refined / unrefined per tool, "
+              "geomean over the zoo; < 1 means refinement helps)\n")
+        gain_rows = [dict({"tool": tool}, **ratios) for tool, ratios
+                     in out["summary"]["refined_over_unrefined"].items()]
+        print(md_table(gain_rows, ["tool", *CELL_METRICS]))
     return out
 
 

@@ -162,6 +162,46 @@ def batch_migration_fraction(prev, new, weights):
     return moved / xp.maximum(xp.sum(w, axis=1), 1e-12)
 
 
+# fixed-point scale for quantize_weights: the total quantized weight fits
+# int32 (jax x32 mode) with headroom, so integer sums of quantized
+# weights are EXACT on host numpy and under any psum order alike — the
+# same "integer counts commute" discipline the sharded metrics rely on
+WEIGHT_QUANT_TOTAL = (1 << 30) - 1
+
+
+def quantize_weights(weights: np.ndarray | None, n: int) -> np.ndarray:
+    """[n] int64 fixed-point node weights for exact integer balance
+    arithmetic (the refinement budget protocol, DESIGN.md §11).
+
+    Unit weights (``weights is None``) map to exactly 1 per node — no
+    quantization error at all. Float weights are scaled so the total is
+    ~``WEIGHT_QUANT_TOTAL`` (fits int32) and rounded to nearest; each
+    node's error is <= 0.5 units, which the budget margin in
+    ``partition.refine`` absorbs.
+
+    Args:
+        weights: [n] nonneg float node weights, or None.
+        n: point count (fixes the unit-weight output length).
+
+    Returns:
+        [n] int64 quantized weights, every entry >= 0.
+
+    Raises:
+        ValueError: negative weights or an all-zero total.
+    """
+    if weights is None:
+        return np.ones(n, np.int64)
+    w = np.asarray(weights, np.float64)
+    if w.shape != (n,):
+        raise ValueError(f"weights must be [{n}], got {w.shape}")
+    if np.any(w < 0):
+        raise ValueError("weights must be nonnegative")
+    total = float(w.sum())
+    if total <= 0:
+        raise ValueError("total weight must be positive")
+    return np.round(w * (WEIGHT_QUANT_TOTAL / total)).astype(np.int64)
+
+
 def edge_cut(part: np.ndarray, indptr: np.ndarray, indices: np.ndarray) -> int:
     src = np.repeat(np.arange(len(indptr) - 1), np.diff(indptr))
     return int((part[src] != part[indices]).sum() // 2)

@@ -70,18 +70,25 @@ class ShardedGraph:
         return self.src.shape[1]
 
     @classmethod
-    def from_sharded(cls, sharded: ShardedPartitionProblem) -> "ShardedGraph":
+    def from_sharded(cls, sharded: ShardedPartitionProblem,
+                     edge_cap: int | None = None) -> "ShardedGraph":
         """Deal the problem's CSR rows onto ``sharded``'s point layout.
 
         Args:
             sharded: an existing sharded view whose problem carries a CSR
                 graph.
+            edge_cap: per-shard edge-slot count ``ecap``. None sizes it
+                to the max per-shard directed-edge count (the minimal
+                valid cap). An explicit cap below that count is an
+                error — a short slab would silently drop edges, which
+                corrupts every metric downstream.
 
         Returns:
             The static-shape sharded graph.
 
         Raises:
-            ValueError: the underlying problem has no CSR adjacency.
+            ValueError: the underlying problem has no CSR adjacency, or
+                ``edge_cap`` is smaller than some shard's edge count.
         """
         prob = sharded.problem
         if not prob.has_graph:
@@ -106,7 +113,17 @@ class ShardedGraph:
                 np.concatenate([[0], np.cumsum(dg)[:-1]]), dg)
             dsts.append(indices[indptr[g][row] + within])
             srcs.append(slots[row].astype(np.int32))
-        ecap = max(max(counts), 1)                     # >= 1: no 0-size slabs
+        need = max(max(counts), 1)                     # >= 1: no 0-size slabs
+        if edge_cap is None:
+            ecap = need
+        else:
+            ecap = int(edge_cap)
+            if ecap < need:
+                raise ValueError(
+                    f"edge_cap={ecap} is smaller than the largest "
+                    f"per-shard directed-edge count {need}; a short edge "
+                    "slab would silently truncate edges — pass "
+                    f"edge_cap >= {need} (or None to size automatically)")
         src = np.zeros((P, ecap), np.int32)
         dst = np.zeros((P, ecap), np.int64)
         valid = np.zeros((P, ecap), bool)
@@ -117,12 +134,13 @@ class ShardedGraph:
         return cls(sharded=sharded, src=src, dst=dst, edge_valid=valid)
 
     @classmethod
-    def from_problem(cls, problem: PartitionProblem,
-                     devices: int) -> "ShardedGraph":
+    def from_problem(cls, problem: PartitionProblem, devices: int,
+                     edge_cap: int | None = None) -> "ShardedGraph":
         """Shard ``problem``'s points *and* graph over ``devices`` shards
         (convenience for ``from_sharded(problem.to_sharded(devices))``)."""
         return cls.from_sharded(
-            ShardedPartitionProblem.from_problem(problem, devices))
+            ShardedPartitionProblem.from_problem(problem, devices),
+            edge_cap=edge_cap)
 
 
 @functools.lru_cache(maxsize=64)

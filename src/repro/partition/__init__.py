@@ -13,6 +13,9 @@ from .distributed import (ShardedPartitionProblem, partition_sharded,
 from .engine import partition
 from .hierarchical import factor_k, hierarchical_partition
 from .problem import PartitionProblem, PartitionResult
+from .refine import (UnknownRefinerError, available_refiners, refine,
+                     refinement_budgets, refinement_quantization,
+                     refiner_short_name, register_refiner, resolve_refiner)
 from .registry import (UnknownMethodError, available_methods,
                        distributed_methods, get_algorithm,
                        register_algorithm, resolve_method,
@@ -23,7 +26,10 @@ from .repartition import (WarmState, greedy_center_match, repartition,
 
 __all__ = [
     "PartitionProblem", "PartitionResult", "partition", "repartition",
-    "WarmState",
+    "refine", "WarmState",
+    "available_refiners", "resolve_refiner", "register_refiner",
+    "refiner_short_name",
+    "UnknownRefinerError", "refinement_budgets", "refinement_quantization",
     "hierarchical_partition", "factor_k",
     "batched_balanced_kmeans", "sequential_balanced_kmeans",
     "bucket_balanced_kmeans", "build_refinement_batch",

@@ -41,6 +41,7 @@ def _parse_hierarchy(hierarchy) -> tuple[int, int]:
 
 def partition(problem: PartitionProblem, method: str = "geographer", *,
               hierarchy=None, devices: int | None = None,
+              refine=None, refine_eps: float | None = None,
               evaluate: bool = False,
               with_diameter: bool = False, **opts) -> PartitionResult:
     """Partition ``problem`` with ``method`` (a registry name).
@@ -55,6 +56,14 @@ def partition(problem: PartitionProblem, method: str = "geographer", *,
         devices: run the sharded multi-device path over P devices (method
             must be registered with ``supports_devices``; with
             ``hierarchy``, the coarse cut is the distributed pass).
+        refine: quality-recovery post-pass over the solver's labels —
+            True (= ``"label_prop"``) or a refiner registry name (see
+            ``repro.partition.refine``). Requires the problem to carry a
+            CSR graph; runs sharded over ``devices`` when set (bit-for-
+            bit equal to the host reference), and the returned result's
+            ``method`` gains the refiner suffix (e.g. ``"sfc+lp"``).
+        refine_eps: balance slack for the refinement budgets (None =
+            ``problem.epsilon``); only meaningful with ``refine``.
         evaluate: fill ``result.quality`` with the paper's metric set
             (graph metrics require the problem to carry a CSR graph).
         with_diameter: include per-block diameters in the evaluation.
@@ -79,6 +88,11 @@ def partition(problem: PartitionProblem, method: str = "geographer", *,
         raise ValueError(
             f"method {method!r} has no multi-device path; devices= is "
             f"supported by: {distributed_methods()}")
+    if refine is not None and refine is not False:
+        from .refine import resolve_refiner
+        refine = resolve_refiner(refine)   # fail fast, before the solve
+    else:
+        refine = None
     if hierarchy is not None:
         k1, k2 = _parse_hierarchy(hierarchy)
         result = hierarchical_partition(problem, k1, k2, method=method,
@@ -87,6 +101,10 @@ def partition(problem: PartitionProblem, method: str = "geographer", *,
         if devices is not None:
             opts["devices"] = devices
         result = get_algorithm(method)(problem, **opts)
+    if refine is not None:
+        from .refine import refine as _refine
+        result = _refine(problem, result, refine, devices=devices,
+                         eps=refine_eps)
     if evaluate:
         result.evaluate(with_diameter=with_diameter)
     return result

@@ -200,6 +200,37 @@ class PartitionResult:
             with_diameter=with_diameter)
         return self.quality
 
+    def refine(self, method="label_prop", *, devices: int | None = None,
+               eps: float | None = None, evaluate: bool = False,
+               **opts) -> "PartitionResult":
+        """Quality-recovery post-pass over this result's labels (the
+        ``repro.partition.refine`` front door bound to ``self``).
+
+        Args:
+            method: refiner registry name (default size-constrained label
+                propagation).
+            devices: None = host reference; P >= 1 = the sharded
+                shard_map path (bit-for-bit equal at every device count).
+            eps: balance slack for the refinement budgets (None = the
+                problem's epsilon).
+            evaluate: fill ``quality`` on the refined result.
+            **opts: forwarded to the refiner (e.g. ``max_rounds``).
+
+        Returns:
+            A new ``PartitionResult`` with refined labels, ``method``
+            suffixed (e.g. ``"geographer+lp"``) and
+            ``stats["refine"]`` recording rounds/moves/cut delta.
+
+        Raises:
+            ValueError: the result has no problem attached, or the
+                problem carries no CSR graph.
+        """
+        if self.problem is None:
+            raise ValueError("result has no problem attached")
+        from .refine import refine as _refine
+        return _refine(self.problem, self, method, devices=devices,
+                       eps=eps, evaluate=evaluate, **opts)
+
     def summary(self) -> dict[str, Any]:
         out = {"method": self.method, "k": self.k,
                "imbalance": self.imbalance(),

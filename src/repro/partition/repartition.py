@@ -297,6 +297,7 @@ def _stats_iters(res: PartitionResult):
 def repartition(problem: PartitionProblem, previous: PartitionResult,
                 method: str = "geographer", *,
                 devices: int | None = None, warm: bool | None = None,
+                refine=None, refine_eps: float | None = None,
                 evaluate: bool = False, with_diameter: bool = False,
                 **opts) -> PartitionResult:
     """Repartition ``problem`` starting from ``previous`` — the dynamic
@@ -321,6 +322,14 @@ def repartition(problem: PartitionProblem, previous: PartitionResult,
             centers. ``warm=False`` with a warm-capable method is the
             fair "cold restart" baseline: same algorithm, fresh SFC
             bootstrap, relabel-matched.
+        refine: quality-recovery post-pass applied AFTER the warm (or
+            cold-relabeled) solve and BEFORE migration accounting — True
+            (= ``"label_prop"``) or a refiner registry name; runs over
+            ``devices`` shards when set. Migration is then measured on
+            the refined labels, since those are what the simulation
+            actually redistributes to.
+        refine_eps: balance slack for the refinement budgets (None =
+            ``problem.epsilon``); only meaningful with ``refine``.
         evaluate: fill ``result.quality`` with the paper metric set.
         with_diameter: include block diameters in the evaluation.
         **opts: forwarded to the algorithm (BKMConfig fields for
@@ -357,10 +366,19 @@ def repartition(problem: PartitionProblem, previous: PartitionResult,
             "previous result carries no centers to warm-start from "
             "(was it produced by a center-based method?)")
 
+    if refine is not None and refine is not False:
+        from .refine import resolve_refiner
+        refine = resolve_refiner(refine)   # fail fast, before the solve
+    else:
+        refine = None
     if warm:
         res = _warm_geographer(problem, previous, devices, **opts)
     else:
         res = _cold_relabel(problem, previous, name, devices, **opts)
+    if refine is not None:
+        from .refine import refine as _refine
+        res = _refine(problem, res, refine, devices=devices,
+                      eps=refine_eps)
     res.stats["migration"] = _migration_stats(previous, res.labels,
                                               problem.weights)
     if evaluate:

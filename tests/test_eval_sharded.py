@@ -158,3 +158,51 @@ def test_deal_scatter_roundtrip(problem):
     # padded slots replicate their aliased real point's value
     np.testing.assert_array_equal(dealt[~sp.valid],
                                   vals[sp.gather[~sp.valid]])
+
+
+def test_edge_cap_minimal_and_too_small(problem, labels):
+    """The remote-block dedup table must behave identically at the
+    MINIMAL edge cap (exactly the largest per-shard edge count — zero
+    padding rows), and an explicitly too-small cap must raise instead of
+    silently truncating edges."""
+    auto = ShardedGraph.from_problem(problem, 4)
+    minimal = ShardedGraph.from_problem(problem, 4, edge_cap=auto.ecap)
+    assert minimal.ecap == auto.ecap
+    # at the minimal cap at least one shard has NO padded edge slots
+    assert bool(np.all(minimal.edge_valid.sum(axis=1).max()
+                       == minimal.ecap))
+    for sg in (auto, minimal):
+        assert edge_cut_sharded(sg, labels) == metrics.edge_cut(
+            labels, problem.indptr, problem.indices)
+        host = metrics.comm_volume(labels, problem.indptr,
+                                   problem.indices, problem.k)
+        assert comm_volume_sharded(sg, labels)[:2] == host[:2]
+    # a roomier explicit cap is allowed and changes nothing
+    padded = ShardedGraph.from_problem(problem, 4, edge_cap=auto.ecap + 5)
+    assert padded.ecap == auto.ecap + 5
+    assert edge_cut_sharded(padded, labels) == edge_cut_sharded(
+        auto, labels)
+    with pytest.raises(ValueError, match="truncate"):
+        ShardedGraph.from_problem(problem, 4, edge_cap=auto.ecap - 1)
+    with pytest.raises(ValueError, match="edge_cap"):
+        ShardedGraph.from_problem(problem, 4, edge_cap=0)
+
+
+def test_edge_cap_minimal_equals_max_degree_at_p_equals_n():
+    """With one point per shard the minimal cap IS the max degree — the
+    tightest layout the dedup table can see."""
+    mesh = meshes.REGISTRY["tri"](25, seed=0)
+    prob = PartitionProblem.from_mesh(mesh, k=3, epsilon=0.03)
+    P = min(8, len(jax.devices()))
+    if P < 2:
+        pytest.skip("needs >= 2 jax devices")
+    # P shards, few points each: cap = max per-shard degree sum
+    sg = ShardedGraph.from_sharded(prob.to_sharded(P))
+    sp = sg.sharded
+    deg = np.diff(prob.indptr)
+    per_shard = [int(deg[sp.gather[p][sp.valid[p]]].sum())
+                 for p in range(P)]
+    assert sg.ecap == max(max(per_shard), 1)
+    lab = (np.arange(prob.n) % 3).astype(np.int64)
+    assert edge_cut_sharded(sg, lab) == metrics.edge_cut(
+        lab, prob.indptr, prob.indices)

@@ -16,32 +16,48 @@ ROW_INT_METRICS = ("cut", "maxCommVol", "totalCommVol", "boundaryNodes",
                    "n_blocks_used")
 ROW_KEYS = set(ROW_INT_METRICS) | {
     "family", "graph", "tool", "n", "k", "imbalance", "balanced",
-    "time_partition_s", "time_eval_s"}
+    "refined", "base_tool", "time_partition_s", "time_refine_s",
+    "time_eval_s"}
 
 
 def validate_schema(out: dict) -> None:
     """Assert the BENCH_experiments.json contract the CI gate relies on."""
     for key in ("schema", "quick", "n", "k", "epsilon", "seed",
-                "eval_devices", "families", "methods", "rows", "summary"):
+                "eval_devices", "refiner", "families", "methods", "rows",
+                "summary"):
         assert key in out, f"missing top-level key {key!r}"
-    assert out["schema"] == 1
+    assert out["schema"] == 2
     families, methods = out["families"], out["methods"]
-    assert len(out["rows"]) == len(families) * len(methods)
+    per_cell = 2 if out["refiner"] else 1
+    assert len(out["rows"]) == len(families) * len(methods) * per_cell
     seen = set()
     for r in out["rows"]:
         assert ROW_KEYS <= set(r), ROW_KEYS - set(r)
-        assert r["family"] in families and r["tool"] in methods
+        assert r["family"] in families and r["base_tool"] in methods
         seen.add((r["family"], r["tool"]))
         for met in ROW_INT_METRICS:
             assert int(r[met]) >= 0
         assert r["totalCommVol"] >= r["maxCommVol"]
         assert r["imbalance"] >= 0.0
+        if r["refined"]:
+            assert r["tool"] != r["base_tool"]
+            assert r["tool"].startswith(r["base_tool"] + "+")
+            assert {"refine_rounds", "refine_moves",
+                    "refine_converged"} <= set(r)
+        else:
+            assert r["tool"] == r["base_tool"]
     assert len(seen) == len(out["rows"]), "duplicate (family, tool) cell"
     trend = out["summary"]["geo_over_tool"]
     assert set(trend) == set(methods) - {"geographer"}
     for ratios in trend.values():
         assert {"cut", "maxCommVol", "totalCommVol"} <= set(ratios)
         assert all(v > 0 for v in ratios.values())
+    if out["refiner"]:
+        assert set(out["summary"]["geo_refined_over_tool"]) == \
+            set(methods) - {"geographer"}
+        assert set(out["summary"]["refined_over_unrefined"]) == \
+            set(methods)
+        assert isinstance(out["summary"]["refined_imbalance_ok"], bool)
     assert isinstance(out["summary"]["geographer_all_balanced"], bool)
 
 
@@ -119,11 +135,15 @@ def gate_dirs(toy_matrix, tmp_path_factory):
     base = tmp_path_factory.mktemp("baseline")
     cur = tmp_path_factory.mktemp("current")
     doc = json.loads(json.dumps(toy_matrix, default=float))
-    # pin the trend summary to CI-config-like values: the absolute trend
-    # floor is calibrated for the quick config (n=4000, ~15% margin), not
-    # for this n=400 toy matrix, and it has its own rejection test below
+    # pin the trend summaries to CI-config-like values: the absolute
+    # trend floors/ceilings are calibrated for the quick config
+    # (n=4000), not for this n=400 toy matrix, and each has its own
+    # rejection test below
     for tool in ("sfc", "rcb"):
         doc["summary"]["geo_over_tool"][tool]["totalCommVol"] = 0.85
+        doc["summary"]["geo_refined_over_tool"][tool]["totalCommVol"] = 0.70
+    doc["summary"]["refined_over_unrefined"]["geographer"][
+        "totalCommVol"] = 0.90
     blob = json.dumps(doc)
     (base / "BENCH_experiments.json").write_text(blob)
     (cur / "BENCH_experiments.json").write_text(blob)
@@ -159,6 +179,65 @@ def test_gate_rejects_missing_cell(gate_dirs, tmp_path):
     proc = _run_gate(base, tmp_path)
     assert proc.returncode == 1
     assert "coverage" in proc.stdout or "missing" in proc.stdout
+
+
+def test_gate_rejects_refined_worse_than_sibling(gate_dirs, tmp_path):
+    """A planted refined row whose cut EXCEEDS its unrefined sibling's
+    is algorithmically impossible (refinement only accepts positive-gain
+    moves) — the gate must reject it as a hard failure, at the benchmark
+    level, whatever the baseline says."""
+    base, _ = gate_dirs
+    bad = json.loads((base / "BENCH_experiments.json").read_text())
+    row = next(r for r in bad["rows"] if r["refined"])
+    sib = next(r for r in bad["rows"]
+               if not r["refined"] and r["family"] == row["family"]
+               and r["tool"] == row["base_tool"])
+    row["cut"] = sib["cut"] + 10
+    (tmp_path / "BENCH_experiments.json").write_text(
+        json.dumps(bad, default=float))
+    proc = _run_gate(base, tmp_path)
+    assert proc.returncode == 1
+    assert "cut_monotonic" in proc.stdout
+
+
+def test_gate_rejects_refined_imbalance_violation(gate_dirs, tmp_path):
+    """Refinement claiming to have worsened balance past epsilon must
+    fail the gate."""
+    base, _ = gate_dirs
+    bad = json.loads((base / "BENCH_experiments.json").read_text())
+    bad["summary"]["refined_imbalance_ok"] = False
+    (tmp_path / "BENCH_experiments.json").write_text(
+        json.dumps(bad, default=float))
+    proc = _run_gate(base, tmp_path)
+    assert proc.returncode == 1
+    assert "refined.imbalance" in proc.stdout
+
+
+def test_gate_rejects_broken_refined_trend(gate_dirs, tmp_path):
+    """The tightened refined-geographer ceiling (below the raw 0.79/0.86
+    trend ratios) is the PR's headline claim — crossing it must fail."""
+    base, _ = gate_dirs
+    bad = json.loads((base / "BENCH_experiments.json").read_text())
+    bad["summary"]["geo_refined_over_tool"]["sfc"]["totalCommVol"] = 0.78
+    (tmp_path / "BENCH_experiments.json").write_text(
+        json.dumps(bad, default=float))
+    proc = _run_gate(base, tmp_path)
+    assert proc.returncode == 1
+    assert "refined_trend" in proc.stdout
+
+
+def test_gate_rejects_vanished_refinement_gain(gate_dirs, tmp_path):
+    """refined/unrefined geographer comm volume at 1.0 means the pass
+    stopped paying for itself — gated strictly below 1.0."""
+    base, _ = gate_dirs
+    bad = json.loads((base / "BENCH_experiments.json").read_text())
+    bad["summary"]["refined_over_unrefined"]["geographer"][
+        "totalCommVol"] = 1.0
+    (tmp_path / "BENCH_experiments.json").write_text(
+        json.dumps(bad, default=float))
+    proc = _run_gate(base, tmp_path)
+    assert proc.returncode == 1
+    assert "refined_gain" in proc.stdout
 
 
 def test_gate_rejects_broken_trend(gate_dirs, tmp_path):

@@ -1,0 +1,343 @@
+"""Property suite for the label-propagation refinement pass
+(repro.partition.refine, DESIGN.md §11) — runs under real hypothesis when
+installed, or the deterministic fixed-example stub (tests/_stubs)
+otherwise.
+
+Host invariants (any labeling of any mesh):
+  * refinement NEVER increases the edge cut, and the cut drops by at
+    least one edge per accepted move
+  * refinement never worsens balance: output imbalance <= max(input
+    imbalance, eps); balanced in => balanced out (<= eps), weighted
+    meshes included (the quantization margin is part of the contract)
+  * a converged refinement is a fixed point: refining again accepts
+    zero moves and returns identical labels
+  * exact equivariance under block relabelings and — via ``node_order``
+    priority keys — under point permutations
+  * natural convergence certifies local optimality: no admissible
+    single positive-gain move remains (brute-force oracle on tiny
+    meshes, admissibility from the exposed ``refinement_budgets``)
+
+Sharded equality (tier2): the shard_map path returns labels bit-for-bit
+equal to the host numpy reference at devices in {1, 2, 4, 8} — every
+decision is made from psum-assembled replicated integer vectors, so this
+is equality, not tolerance.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import meshes, metrics
+from repro.partition import (PartitionProblem, PartitionResult,
+                             UnknownRefinerError, available_refiners,
+                             partition, refine, refinement_budgets,
+                             refinement_quantization, repartition,
+                             resolve_refiner)
+
+FAMILIES = ["tri", "refined2d", "aniso", "rggpow", "climate25d"]
+
+needs8 = pytest.mark.skipif(len(jax.devices()) < 8,
+                            reason="needs 8 (virtual) jax devices")
+needs2 = pytest.mark.skipif(len(jax.devices()) < 2,
+                            reason="needs 2 (virtual) jax devices")
+
+
+def _instance(family: str, n: int, k: int, seed: int):
+    """Randomized (problem, labels): labels cover arbitrary subsets of
+    [0, k) including empty blocks — refinement must cope with worse
+    inputs than any solver produces."""
+    mesh = meshes.REGISTRY[family](n, seed=seed)
+    prob = PartitionProblem.from_mesh(mesh, k=k, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    return prob, rng.integers(0, k, prob.n).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# core invariants
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(120, 600),
+       st.integers(2, 10), st.integers(0, 10 ** 6))
+def test_never_increases_cut_and_gain_accounting(family, n, k, seed):
+    prob, labels = _instance(family, n, k, seed)
+    out = refine(prob, labels)
+    st_ = out.stats["refine"]
+    cut0 = metrics.edge_cut(labels, prob.indptr, prob.indices)
+    cut1 = metrics.edge_cut(out.labels, prob.indptr, prob.indices)
+    assert st_["cut_before"] == cut0 and st_["cut_after"] == cut1
+    assert cut1 <= cut0
+    # every accepted move has integer gain >= 1 against frozen neighbor
+    # labels, and accepted moves form an independent set — so the cut
+    # drops by at least one edge per move
+    assert cut0 - cut1 >= st_["moves"]
+    assert (st_["moves"] == 0) == (cut1 == cut0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(120, 600),
+       st.integers(2, 10), st.integers(0, 10 ** 6))
+def test_never_worsens_imbalance(family, n, k, seed):
+    prob, labels = _instance(family, n, k, seed)
+    out = refine(prob, labels)
+    imb0 = metrics.imbalance(labels, prob.k, prob.weights)
+    imb1 = metrics.imbalance(np.asarray(out.labels), prob.k, prob.weights)
+    assert imb1 <= max(imb0, prob.epsilon) + 1e-9
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from(["tri", "refined2d", "aniso", "climate25d"]),
+       st.integers(0, 10 ** 6))
+def test_balanced_in_balanced_out(family, seed):
+    """A balanced input stays <= eps after refinement — the budget
+    protocol's whole point, including float-weighted meshes where the
+    quantization margin has to absorb the rounding drift."""
+    mesh = meshes.REGISTRY[family](400, seed=seed)
+    prob = PartitionProblem.from_mesh(mesh, k=6, seed=seed)
+    res = partition(prob, method="geographer")
+    assert res.imbalance() <= prob.epsilon + 1e-6, "precondition"
+    out = res.refine()
+    assert metrics.imbalance(np.asarray(out.labels), prob.k,
+                             prob.weights) <= prob.epsilon + 1e-6
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(120, 500),
+       st.integers(2, 8), st.integers(0, 10 ** 6))
+def test_converged_refinement_is_fixed_point(family, n, k, seed):
+    prob, labels = _instance(family, n, k, seed)
+    out = refine(prob, labels)
+    assert out.stats["refine"]["converged"]
+    again = refine(prob, out.labels)
+    assert again.stats["refine"]["moves"] == 0
+    assert again.stats["refine"]["rounds"] == 1
+    np.testing.assert_array_equal(np.asarray(again.labels),
+                                  np.asarray(out.labels))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(120, 500),
+       st.integers(2, 8), st.integers(0, 10 ** 6))
+def test_block_relabel_equivariance(family, n, k, seed):
+    """refine(sigma(labels)) == sigma(refine(labels)) EXACTLY for any
+    block-id permutation sigma — the canonicalization contract."""
+    prob, labels = _instance(family, n, k, seed)
+    rng = np.random.default_rng(seed + 7)
+    sigma = rng.permutation(k)
+    a = np.asarray(refine(prob, labels).labels)
+    b = np.asarray(refine(prob, sigma[labels]).labels)
+    np.testing.assert_array_equal(sigma[a], b)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from(["tri", "aniso", "rggpow", "climate25d"]),
+       st.integers(120, 400), st.integers(2, 8), st.integers(0, 10 ** 6))
+def test_point_permutation_equivariance(family, n, k, seed):
+    """Permuting the points (and passing permutation-consistent
+    ``node_order`` keys) permutes the refined labels EXACTLY."""
+    prob, labels = _instance(family, n, k, seed)
+    rng = np.random.default_rng(seed + 13)
+    p = rng.permutation(prob.n)              # new i holds old point p[i]
+    inv = np.empty(prob.n, np.int64)
+    inv[p] = np.arange(prob.n)
+    # permute the CSR graph: row i of the new problem is old row p[i]
+    # with every neighbor id mapped through inv
+    indptr = np.asarray(prob.indptr)
+    indices = np.asarray(prob.indices)
+    deg = np.diff(indptr)[p]
+    new_indptr = np.concatenate([[0], np.cumsum(deg)])
+    new_indices = np.concatenate(
+        [inv[indices[indptr[v]:indptr[v + 1]]] for v in p])
+    pprob = PartitionProblem(
+        points=prob.points[p], k=prob.k,
+        weights=None if prob.weights is None else prob.weights[p],
+        epsilon=prob.epsilon, indptr=new_indptr, indices=new_indices,
+        seed=prob.seed)
+    a = np.asarray(refine(prob, labels).labels)
+    b = np.asarray(refine(pprob, labels[p], node_order=p).labels)
+    np.testing.assert_array_equal(a[p], b)
+
+
+# ---------------------------------------------------------------------------
+# local-optimality oracle (tiny meshes, brute force)
+
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from(["tri", "climate25d"]), st.integers(30, 70),
+       st.integers(2, 5), st.integers(0, 10 ** 6))
+def test_no_admissible_positive_gain_move_remains(family, n, k, seed):
+    """After natural convergence, exhaustively trying every (node, block)
+    move finds no admissible one that lowers the cut — the convergence
+    certificate, with admissibility taken from the same exposed budget
+    helper the rounds use."""
+    prob, labels = _instance(family, n, k, seed)
+    out = refine(prob, labels)
+    assert out.stats["refine"]["converged"], \
+        "oracle needs natural convergence, raise max_rounds"
+    lab = np.asarray(out.labels)
+    iw, budget = refinement_budgets(prob, lab)
+    cut0 = metrics.edge_cut(lab, prob.indptr, prob.indices)
+    for v in range(prob.n):
+        for b in range(prob.k):
+            if b == lab[v] or iw[v] > budget[b]:
+                continue
+            trial = lab.copy()
+            trial[v] = b
+            assert metrics.edge_cut(trial, prob.indptr,
+                                    prob.indices) >= cut0, (v, b)
+
+
+def test_budget_helpers_consistent():
+    """refinement_budgets == limit - block weights, clamped at zero, in
+    quantized units; unit weights quantize to ones with a zero margin."""
+    mesh = meshes.REGISTRY["tri"](200, seed=0)
+    prob = PartitionProblem.from_mesh(mesh, k=4, seed=0)
+    iw, limit = refinement_quantization(prob)
+    assert prob.weights is None
+    np.testing.assert_array_equal(iw, np.ones(prob.n, np.int64))
+    assert limit == int((1 + prob.epsilon) * prob.n / prob.k)
+    labels = np.zeros(prob.n, np.int64)
+    iw2, budget = refinement_budgets(prob, labels)
+    np.testing.assert_array_equal(iw, iw2)
+    assert budget[0] == 0                     # block 0 over-full
+    assert np.all(budget[1:] == limit)
+    with pytest.raises(ValueError, match="eps"):
+        refinement_quantization(prob, eps=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# sharded == host, bit for bit
+
+@needs2
+def test_sharded_equals_host_fast():
+    """Tier-1 smoke of the parity claim at P in {1, 2} (full randomized
+    sweep at P up to 8 runs under tier2)."""
+    prob, labels = _instance("tri", 300, 6, seed=3)
+    host = np.asarray(refine(prob, labels).labels)
+    for P in (1, 2):
+        dev = np.asarray(refine(prob, labels, devices=P).labels)
+        np.testing.assert_array_equal(host, dev)
+
+
+@pytest.mark.tier2
+@needs8
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(120, 600),
+       st.integers(2, 10), st.integers(0, 10 ** 6),
+       st.sampled_from([1, 2, 4, 8]))
+def test_sharded_equals_host_randomized(family, n, k, seed, devices):
+    """Acceptance: the shard_map refinement returns labels bit-for-bit
+    equal to the host numpy reference at every device count, on
+    randomized meshes and randomized labelings."""
+    prob, labels = _instance(family, n, k, seed)
+    host = refine(prob, labels)
+    dev = refine(prob, labels, devices=devices)
+    np.testing.assert_array_equal(np.asarray(host.labels),
+                                  np.asarray(dev.labels))
+    for fld in ("rounds", "moves", "converged"):
+        assert host.stats["refine"][fld] == dev.stats["refine"][fld]
+
+
+@pytest.mark.tier2
+@needs8
+def test_sharded_solver_to_refiner_pipeline():
+    """partition(devices=P, refine=True): the solve and the refinement
+    both run sharded, and the refined labels still match a host-refined
+    copy of the same solve."""
+    mesh = meshes.REGISTRY["tri"](600, seed=1)
+    prob = PartitionProblem.from_mesh(mesh, k=8, seed=1)
+    res = partition(prob, method="geographer", devices=4)
+    a = partition(prob, method="geographer", devices=4, refine=True)
+    b = refine(prob, res)                    # host reference
+    np.testing.assert_array_equal(np.asarray(a.labels),
+                                  np.asarray(b.labels))
+
+
+# ---------------------------------------------------------------------------
+# front doors and error paths
+
+def test_refine_front_door_plumbing():
+    prob, labels = _instance("tri", 200, 4, seed=0)
+    res = partition(prob, method="sfc")
+    out = res.refine()
+    assert isinstance(out, PartitionResult)
+    assert out.method == "sfc+lp"
+    st_ = out.stats["refine"]
+    assert set(st_) >= {"method", "rounds", "moves", "converged",
+                        "cut_before", "cut_after", "devices", "eps"}
+    assert st_["method"] == "label_prop" and st_["devices"] is None
+    assert st_["eps"] == prob.epsilon
+    # raw label arrays work too (no PartitionResult required)
+    raw = refine(prob, labels)
+    assert raw.method == "labels+lp"
+    # evaluate=True fills quality
+    ev = refine(prob, res, evaluate=True)
+    assert ev.quality is not None and "totalCommVol" in ev.quality
+    # aliases resolve; unknown names fail loudly
+    assert resolve_refiner("lp") == "label_prop"
+    assert resolve_refiner(True) == "label_prop"
+    assert "label_prop" in available_refiners()
+    with pytest.raises(UnknownRefinerError):
+        refine(prob, res, "nope")
+    with pytest.raises(UnknownRefinerError):
+        partition(prob, method="sfc", refine="nope")
+
+
+def test_refine_error_paths():
+    mesh = meshes.REGISTRY["tri"](150, seed=0)
+    prob = PartitionProblem.from_mesh(mesh, k=4, seed=0)
+    labels = np.zeros(prob.n, np.int64)
+    nograph = PartitionProblem(points=prob.points, k=4, seed=0)
+    with pytest.raises(ValueError, match="graph"):
+        refine(nograph, labels)
+    with pytest.raises(TypeError):
+        refine("not a problem", labels)
+    with pytest.raises(ValueError, match="labels"):
+        refine(prob, labels[:-1])
+    with pytest.raises(ValueError, match="max_rounds"):
+        refine(prob, labels, max_rounds=0)
+    with pytest.raises(ValueError, match="unique"):
+        refine(prob, labels, node_order=np.zeros(prob.n, np.int64))
+    with pytest.raises(ValueError, match="node_order"):
+        refine(prob, labels, node_order=np.arange(prob.n - 1))
+    with pytest.raises(ValueError, match="int32"):
+        refine(prob, labels,
+               node_order=np.arange(prob.n, dtype=np.int64) + 2 ** 40)
+    res = PartitionResult(labels=labels, k=4, method="x")
+    with pytest.raises(ValueError, match="problem"):
+        res.refine()
+
+
+@needs2
+def test_refine_rejects_mismatched_graph():
+    prob, labels = _instance("tri", 200, 4, seed=0)
+    g1 = prob.to_sharded_graph(1)
+    with pytest.raises(ValueError, match="different problem/devices"):
+        refine(prob, labels, devices=2, graph=g1)
+
+
+def test_partition_refine_composition():
+    prob, _ = _instance("tri", 300, 6, seed=2)
+    base = partition(prob, method="rcb")
+    comp = partition(prob, method="rcb", refine=True)
+    assert comp.method == "rcb+lp"
+    ref = refine(prob, base)
+    np.testing.assert_array_equal(np.asarray(comp.labels),
+                                  np.asarray(ref.labels))
+    # refine=False / None are no-ops
+    off = partition(prob, method="rcb", refine=False)
+    assert off.method == "rcb" and "refine" not in off.stats
+
+
+def test_repartition_refines_before_migration_accounting():
+    mesh = meshes.REGISTRY["tri"](300, seed=4)
+    prob = PartitionProblem.from_mesh(mesh, k=6, seed=4)
+    prev = partition(prob, method="geographer")
+    rng = np.random.default_rng(5)
+    prob2 = prob.replace(
+        weights=rng.uniform(0.5, 1.5, prob.n))
+    res = repartition(prob2, prev, refine=True)
+    assert res.method.endswith("+lp")
+    assert "refine" in res.stats and "migration" in res.stats
+    # migration is measured on the REFINED labels
+    expect = metrics.migration_fraction(prev.labels, res.labels,
+                                        prob2.weights)
+    assert res.stats["migration"]["fraction"] == pytest.approx(expect)
