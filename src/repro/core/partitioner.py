@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .balanced_kmeans import BKMConfig, balanced_kmeans
-from .sfc import hilbert_index_np, hilbert_index_jnp, sfc_initial_centers
+from .sfc import hilbert_index_jnp, sfc_initial_centers
 
 
 def geographer_partition(points: np.ndarray, k: int,

@@ -161,7 +161,7 @@ def _build_metrics_fn(devices: int, cap: int, ecap: int, n: int, k: int):
     mesh = partition_mesh(devices)
     axis = PARTITION_AXIS
 
-    def local(labels, gidx, lvalid, src, dst, evalid):
+    def local(labels, gidx, lvalid, src, dst, evalid):  # spmdlint: psum-budget=4
         labels = labels.reshape(cap)
         gidx = gidx.reshape(cap)
         lvalid = lvalid.reshape(cap)

@@ -81,7 +81,11 @@ def flash_attention_pallas(q, k, v, bq: int = 512, bk: int = 512,
     BH, S, dh = q.shape
     BKV = k.shape[0]
     G = BH // BKV
-    assert S % bq == 0 and S % bk == 0
+    if S % bq != 0 or S % bk != 0:
+        raise ValueError(
+            f"flash_attention_pallas: sequence length {S} must be a "
+            f"multiple of the query tile bq={bq} and the key tile "
+            f"bk={bk}; pad the sequence or pass matching tile sizes")
     grid = (BH, S // bq, S // bk)
     scale = dh ** -0.5
     kernel = functools.partial(_flash_kernel, bq=bq, bk=bk,

@@ -10,8 +10,6 @@ from __future__ import annotations
 import argparse
 import json
 
-import jax
-
 from repro import configs
 from repro.data.pipeline import SyntheticLM
 from repro.dist.rules import resolve_rules

@@ -9,7 +9,7 @@ can be scanned (fast compile) or unrolled (exact dry-run FLOPs).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Literal
 
 import jax.numpy as jnp

@@ -13,8 +13,6 @@ single-token decode against a KV cache (sequence- or batch-sharded).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -9,7 +9,6 @@ compile; used for training and the memory fit-check) or python-unrolled
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

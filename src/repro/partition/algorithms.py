@@ -77,7 +77,8 @@ def _baseline_result(problem, labels, method) -> PartitionResult:
     return res
 
 
-@register_algorithm("sfc", aliases=("hsfc", "hilbert"))
+@register_algorithm("sfc", aliases=("hsfc", "hilbert"),
+                    supports_devices=False, supports_warm_start=False)
 def _sfc(problem: PartitionProblem, **opts) -> PartitionResult:
     if opts:
         raise TypeError(f"sfc takes no options, got {sorted(opts)}")
@@ -86,14 +87,16 @@ def _sfc(problem: PartitionProblem, **opts) -> PartitionResult:
     return _baseline_result(problem, labels, "sfc")
 
 
-@register_algorithm("rcb")
+@register_algorithm("rcb", supports_devices=False,
+                    supports_warm_start=False)
 def _rcb(problem: PartitionProblem, **opts) -> PartitionResult:
     labels = baselines.rcb(problem.points, problem.k, problem.weights,
                            **opts)
     return _baseline_result(problem, labels, "rcb")
 
 
-@register_algorithm("rib")
+@register_algorithm("rib", supports_devices=False,
+                    supports_warm_start=False)
 def _rib(problem: PartitionProblem, **opts) -> PartitionResult:
     if opts:
         raise TypeError(f"rib takes no options, got {sorted(opts)}")
@@ -101,7 +104,8 @@ def _rib(problem: PartitionProblem, **opts) -> PartitionResult:
     return _baseline_result(problem, labels, "rib")
 
 
-@register_algorithm("multijagged", aliases=("mj",))
+@register_algorithm("multijagged", aliases=("mj",),
+                    supports_devices=False, supports_warm_start=False)
 def _multijagged(problem: PartitionProblem, **opts) -> PartitionResult:
     if opts:
         raise TypeError(f"multijagged takes no options, got {sorted(opts)}")

@@ -319,7 +319,7 @@ def _build_lp_runner(devices: int, cap: int, ecap: int, n: int, k: int,
             rounds, moved, _, _ = state
             return (rounds < max_rounds) & (moved > 0)
 
-        def body(state):
+        def body(state):  # spmdlint: psum-budget=4
             rounds, _, moves_total, labels = state
             glabels = scatter_psum(labels)
             W = jax.lax.psum(jnp.zeros(k, i32).at[labels].add(liw), axis)

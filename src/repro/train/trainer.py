@@ -13,7 +13,7 @@ so the same Trainer runs the CPU smoke configs and the production mesh.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import numpy as np

@@ -2,6 +2,9 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+# repo root too: the spmdlint tests import the linter as tools.spmdlint,
+# exactly the way CI invokes it (python -m tools.spmdlint ...)
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), os.pardir))
 
 # Give CPU-only runners 8 virtual jax devices so the multi-device
 # (shard_map) tests run in-process. Must happen before the first jax

@@ -5,8 +5,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.balanced_kmeans import (BKMConfig, adapt_influence,
-                                        erode_influence, balanced_kmeans,
-                                        assign_effective)
+                                        erode_influence, assign_effective)
 from repro.core.partitioner import geographer_partition
 from repro.core import metrics
 

@@ -1,0 +1,64 @@
+"""envflags.force_virtual_devices — the pre-jax-import entry point.
+
+Every harness (tests/conftest.py, benchmarks/run.py, the examples) calls
+this before the first jax import; its contract is pure environment-string
+surgery, so it is testable without touching jax at all."""
+import os
+
+import pytest
+
+from repro.envflags import _COUNT_FLAG, force_virtual_devices
+
+
+@pytest.fixture
+def xla_flags(monkeypatch):
+    """Sandbox XLA_FLAGS; returns a reader for its current value."""
+    def read():
+        return os.environ.get("XLA_FLAGS", "")
+    return read
+
+
+def test_sets_flag_when_unset(monkeypatch, xla_flags):
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    force_virtual_devices(8)
+    assert xla_flags() == f"{_COUNT_FLAG}=8"
+
+
+def test_appends_to_existing_operator_flags(monkeypatch, xla_flags):
+    monkeypatch.setenv("XLA_FLAGS", "--xla_cpu_enable_fast_math=false")
+    force_virtual_devices(4)
+    assert xla_flags() == (
+        f"--xla_cpu_enable_fast_math=false {_COUNT_FLAG}=4")
+
+
+def test_existing_count_flag_wins_without_override(monkeypatch, xla_flags):
+    operator = f"{_COUNT_FLAG}=2 --xla_dump_to=/tmp/x"
+    monkeypatch.setenv("XLA_FLAGS", operator)
+    force_virtual_devices(8)
+    assert xla_flags() == operator          # exact no-op
+
+
+def test_override_replaces_only_the_count_flag(monkeypatch, xla_flags):
+    monkeypatch.setenv(
+        "XLA_FLAGS",
+        f"--xla_dump_to=/tmp/x {_COUNT_FLAG}=2 --xla_cpu_use_thunks=true")
+    force_virtual_devices(16, override=True)
+    flags = xla_flags().split()
+    # the other operator flags survive, in order, exactly once
+    assert flags[:2] == ["--xla_dump_to=/tmp/x", "--xla_cpu_use_thunks=true"]
+    assert flags[2:] == [f"{_COUNT_FLAG}=16"]
+
+
+def test_repeated_calls_are_idempotent(monkeypatch, xla_flags):
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    force_virtual_devices(8)
+    first = xla_flags()
+    force_virtual_devices(8)
+    force_virtual_devices(4)                 # existing flag wins
+    assert xla_flags() == first
+
+
+def test_override_from_unset_is_clean(monkeypatch, xla_flags):
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    force_virtual_devices(3, override=True)
+    assert xla_flags() == f"{_COUNT_FLAG}=3"

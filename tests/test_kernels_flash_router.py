@@ -44,8 +44,6 @@ def test_flash_matches_model_dense_path():
     """Kernel agrees with the model's dense attention math (the path the
     smoke tests run): same GQA grouping, same causal mask."""
     from repro.models import layers as L
-    from repro.launch.mesh import make_host_mesh
-    from repro.dist.rules import resolve_rules
     from repro import configs
     cfg = configs.get_config("phi4_mini_3p8b", smoke=True)
     B, S, H, KV, dh = 2, 128, cfg.n_heads, cfg.n_kv_heads, cfg.hd

@@ -317,7 +317,7 @@ def test_fused_true_requires_capable_backend(problem):
     from repro.kernels.ops import register_assign_backend, _ASSIGN_BACKENDS
     from repro.kernels.ops import assign_argmin_jnp
 
-    @register_assign_backend("_nomoments_test")
+    @register_assign_backend("_nomoments_test", supports_moments=False)
     def _plain(points, centers, influence, *, chunk=None, block_p=1024,
                block_c=128, precision="f32"):
         return assign_argmin_jnp(points, centers, influence, chunk=chunk,

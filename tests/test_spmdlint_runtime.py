@@ -1,0 +1,125 @@
+"""Retrace sentinel (tools/spmdlint/runtime.py): the planted
+recompilation MUST trip it, the real steady-state serving path MUST
+pass it — the acceptance pair for the CI sanitizer leg."""
+from dataclasses import dataclass
+
+import numpy as np
+import pytest
+
+from tools.spmdlint.runtime import (HOT_ENTRY_POINTS, RetraceError,
+                                    RetraceSentinel, _compile_count)
+
+
+def _pts(n, seed=0):
+    return np.random.default_rng(seed).uniform(0, 1, (n, 2))
+
+
+def test_hot_entry_points_resolve_and_count():
+    s = RetraceSentinel()
+    snap = s.snapshot()
+    # every declared entry point must exist and expose a counter — a
+    # rename in the engine should fail HERE, not silently un-watch it
+    assert set(snap) == {label for label, _, _ in HOT_ENTRY_POINTS}
+    assert all(isinstance(v, int) for v in snap.values())
+
+
+def test_planted_recompilation_trips_the_sentinel():
+    """An unhashed (identity-hashed) config passed fresh per call is the
+    canonical steady-state retrace bug: every call is a new static key."""
+    import jax
+    import jax.numpy as jnp
+
+    @dataclass(eq=False)            # eq=False -> hash by object identity
+    class UnhashedCfg:
+        scale: float = 2.0
+
+    from functools import partial
+
+    @partial(jax.jit, static_argnames=("cfg",))
+    def hot(x, cfg):
+        return x * cfg.scale
+
+    x = jnp.ones(8)
+    hot(x, UnhashedCfg())           # warm-up compile
+    s = RetraceSentinel()
+    s.track("planted", hot)
+    with s:
+        hot(x, UnhashedCfg())       # fresh object -> new static key
+        hot(x, UnhashedCfg())
+    assert s.deltas().get("planted", 0) >= 2
+    with pytest.raises(RetraceError, match="planted"):
+        s.assert_steady()
+
+
+def test_well_behaved_static_config_stays_steady():
+    """The same shape with a value-hashed config must NOT trip it."""
+    import jax
+    import jax.numpy as jnp
+    from functools import partial
+
+    @dataclass(frozen=True)         # value hash: fresh instances reuse
+    class GoodCfg:
+        scale: float = 2.0
+
+    @partial(jax.jit, static_argnames=("cfg",))
+    def hot(x, cfg):
+        return x * cfg.scale
+
+    x = jnp.ones(8)
+    hot(x, GoodCfg())
+    s = RetraceSentinel()
+    s.track("good", hot)
+    with s:
+        for _ in range(3):
+            hot(x, GoodCfg())
+    s.assert_steady()
+
+
+def test_steady_state_serving_path_does_not_retrace():
+    """The real thing: a warmed PartitionServer keeps serving the same
+    shape family without a single new compile on ANY hot entry point."""
+    from repro.serve import PartitionRequest, PartitionServer
+
+    server = PartitionServer(tiers=(256,), slots=2, cache_slots=8)
+
+    def req(seed):
+        return PartitionRequest(tenant="t", points=_pts(256, seed), k=4,
+                                seed=7)
+
+    # warm-up: cold solve compiles, then the warm-start solve compiles
+    server.serve([req(0)])
+    server.serve([req(1)])
+    sentinel = RetraceSentinel()
+    with sentinel:
+        for seed in range(2, 6):
+            [resp] = server.serve([req(seed)])
+            assert resp.labels.shape == (256,)
+    sentinel.assert_steady()
+
+
+def test_steady_state_repartition_does_not_retrace():
+    from repro.partition import PartitionProblem, partition, repartition
+
+    prob = PartitionProblem(points=_pts(192, 3), k=4, seed=0)
+    res = partition(prob, method="geographer")
+    # warm-up the repartition trace once
+    prob2 = PartitionProblem(points=_pts(192, 4), k=4, seed=0)
+    res2 = repartition(prob2, res)
+    sentinel = RetraceSentinel()
+    with sentinel:
+        prob3 = PartitionProblem(points=_pts(192, 5), k=4, seed=0)
+        repartition(prob3, res2)
+    sentinel.assert_steady()
+
+
+def test_track_rejects_uncountable_callables():
+    s = RetraceSentinel()
+    with pytest.raises(TypeError, match="nothing to watch"):
+        s.track("plain", lambda x: x)
+
+
+def test_compile_count_reads_lru_builders():
+    from repro.eval import sharded
+
+    before = _compile_count(sharded._build_metrics_fn)
+    assert isinstance(before, int)

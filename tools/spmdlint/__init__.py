@@ -1,0 +1,61 @@
+"""spmdlint — repo-specific static analysis for the SPMD discipline.
+
+The paper's scalability argument (§4.1) rests on a communication
+discipline — *global vector sums only* — plus trace-safety and Pallas
+lowering constraints that DESIGN.md states in prose. This package
+machine-checks them:
+
+========  ==================================================================
+rule id   meaning
+========  ==================================================================
+SPMD001   forbidden collective (``all_gather``/``all_to_all``/``ppermute``/
+          ``pshuffle``/``pswapaxes``) — only ``psum``/``pmin``/``pmax``
+          reductions are sanctioned inside SPMD bodies
+SPMD002   axis-name string literal not in the declared axis universe
+          (``dist.rules``; configurable via ``[spmd] axes`` in
+          spmdlint.toml)
+SPMD003   ``# spmdlint: psum-budget=N`` assertion failed: the function's
+          statically counted psum call sites (direct + via local helpers)
+          differ from the declared per-round budget
+TRC001    ``int()``/``float()``/``bool()``/``len()``/``.item()``/
+          ``.tolist()`` on a traced value inside a jitted/shard_mapped/
+          scanned body (the TracerIntegerConversionError class of bug)
+TRC002    ``np.*`` call on a traced value inside a traced body
+TRC003    Python ``if``/``while`` on a traced expression inside a traced
+          body (host control flow on device data)
+KER001    op outside the Mosaic-lowerable allowlist inside a Pallas kernel
+          body (reached from ``pl.pallas_call``)
+KER002    ``make_async_copy`` without a matching ``.start()``/``.wait()``
+          semaphore pair in the same function
+KER003    ``pl.pallas_call`` wrapper without a tile-multiple shape check
+          (``_check_tiling`` call or explicit ``raise ValueError``)
+REG001    registry call site missing explicit capability kwargs
+          (``supports_moments`` / ``supports_devices`` +
+          ``supports_warm_start`` / ``short``)
+========  ==================================================================
+
+Run ``python -m tools.spmdlint src tests benchmarks tools``; sanctioned
+exceptions live in ``spmdlint.toml`` (see DESIGN.md §12). The dynamic
+companion is :mod:`tools.spmdlint.runtime` — a pytest plugin with a jit
+retrace sentinel and an opt-in debug-NaNs + leak-checking mode.
+"""
+from __future__ import annotations
+
+__version__ = "1.0"
+
+from .diagnostics import Diagnostic  # noqa: F401
+from .engine import lint_paths, lint_source, main  # noqa: F401
+
+RULES = {
+    "SPMD001": "forbidden collective inside an SPMD body (psum-only "
+               "discipline, paper §4.1)",
+    "SPMD002": "axis-name literal outside the declared axis universe",
+    "SPMD003": "psum-budget assertion failed (# spmdlint: psum-budget=N)",
+    "TRC001": "host conversion (int/float/bool/len/.item) of a traced value",
+    "TRC002": "np.* call on a traced value inside a traced body",
+    "TRC003": "Python if/while on a traced expression",
+    "KER001": "op outside the Mosaic-lowerable allowlist in a Pallas kernel",
+    "KER002": "make_async_copy without a matching semaphore start/wait pair",
+    "KER003": "pallas_call wrapper without a tile-multiple shape check",
+    "REG001": "registry call site missing explicit capability kwargs",
+}

@@ -1,0 +1,6 @@
+"""``python -m tools.spmdlint src tests benchmarks tools``."""
+import sys
+
+from .engine import main
+
+sys.exit(main())

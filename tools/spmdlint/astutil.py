@@ -1,0 +1,312 @@
+"""AST plumbing shared by the rule modules.
+
+One :class:`ModuleInfo` per linted file: the parse tree, every function
+with its in-file qualname and parent chain, which functions are *traced
+bodies* (jit-decorated, or passed to ``shard_map`` / ``lax.scan`` /
+``while_loop`` / ``fori_loop`` / ``cond`` / ``switch`` / ``map`` /
+``vmap`` / ``pl.pallas_call``) and with which statically-known
+``static_argnames``, plus the ``# spmdlint:`` directive comments.
+
+The analysis is deliberately *local*: only functions the module itself
+hands to a tracing wrapper are treated as traced, and taint never flows
+through closures — that keeps the pass quiet on the large host-side
+surface while still covering every SPMD body in the repo (they are all
+wrapped where they are defined).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+
+# wrappers whose function-valued arguments become traced bodies
+_TRACING_WRAPPERS = {
+    "shard_map", "scan", "while_loop", "fori_loop", "cond", "switch",
+    "map", "vmap", "pmap", "jit", "pallas_call", "checkpoint", "remat",
+    "custom_vjp", "custom_jvp", "grad", "value_and_grad",
+}
+
+_DIRECTIVE_RE = re.compile(r"#\s*spmdlint:\s*([a-z-]+)\s*=\s*(\S+)")
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_tail(call: ast.Call) -> str | None:
+    """Last component of the called dotted name (``jax.lax.psum`` ->
+    ``psum``); None for computed callees."""
+    name = dotted_name(call.func)
+    return name.rsplit(".", 1)[-1] if name else None
+
+
+@dataclass
+class FuncInfo:
+    """One function (def or lambda) with its lint-relevant metadata."""
+    node: ast.FunctionDef | ast.AsyncFunctionDef | ast.Lambda
+    qualname: str
+    parent: "FuncInfo | None" = None
+    traced: bool = False
+    traced_reason: str = ""
+    static_params: set[str] = field(default_factory=set)
+    directives: dict[str, str] = field(default_factory=dict)
+
+    @property
+    def name(self) -> str:
+        return getattr(self.node, "name", "<lambda>")
+
+    @property
+    def params(self) -> list[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return names
+
+    def body_nodes(self):
+        body = self.node.body
+        return body if isinstance(body, list) else [body]
+
+
+class ModuleInfo:
+    """Parsed view of one file, shared by all rules."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.functions: list[FuncInfo] = []
+        #: node id -> FuncInfo (for wrapper-argument resolution)
+        self._by_node: dict[int, FuncInfo] = {}
+        #: per-scope simple-name index: scope FuncInfo|None -> {name: info}
+        self._scope_defs: dict[int | None, dict[str, FuncInfo]] = {None: {}}
+        #: name -> Call node of a ``partial(...)`` it was assigned from
+        self._partial_aliases: dict[str, ast.Call] = {}
+        #: imported simple name -> source module string ("" for plain
+        #: ``import x``; leading dots kept for relative imports)
+        self.imports: dict[str, str] = {}
+        self._collect_imports()
+        self._collect_functions()
+        self._attach_directives()
+        self._mark_traced()
+
+    # -- construction ---------------------------------------------------
+
+    def _collect_imports(self):
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.ImportFrom):
+                module = "." * node.level + (node.module or "")
+                for alias in node.names:
+                    self.imports[alias.asname or alias.name] = module
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    name = alias.asname or alias.name.split(".", 1)[0]
+                    self.imports[name] = alias.name
+
+    def _collect_functions(self):
+        def walk(node: ast.AST, parent: FuncInfo | None, prefix: str):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qual = f"{prefix}{child.name}"
+                    info = FuncInfo(child, qual, parent)
+                    self._register(info, parent)
+                    walk(child, info, qual + ".")
+                elif isinstance(child, ast.Lambda):
+                    info = FuncInfo(child, f"{prefix}<lambda>", parent)
+                    self._register(info, parent)
+                    walk(child, info, f"{prefix}<lambda>.")
+                elif isinstance(child, ast.Assign) and parent is not None:
+                    # `kernel = functools.partial(_body, ...)` aliasing,
+                    # later resolved when `kernel` reaches pallas_call
+                    if (isinstance(child.value, ast.Call)
+                            and call_tail(child.value) == "partial"):
+                        for tgt in child.targets:
+                            if isinstance(tgt, ast.Name):
+                                self._partial_aliases[tgt.id] = child.value
+                    walk(child, parent, prefix)
+                elif isinstance(child, ast.ClassDef):
+                    walk(child, parent, f"{prefix}{child.name}.")
+                else:
+                    walk(child, parent, prefix)
+
+        walk(self.tree, None, "")
+
+    def _register(self, info: FuncInfo, parent: FuncInfo | None):
+        self.functions.append(info)
+        self._by_node[id(info.node)] = info
+        key = id(parent) if parent is not None else None
+        self._scope_defs.setdefault(key, {})[info.name] = info
+
+    def _attach_directives(self):
+        """``# spmdlint: key=value`` comments attach to the function whose
+        ``def`` line carries them, else to the innermost function spanning
+        the comment's line. Real COMMENT tokens only — a directive-shaped
+        substring inside a string literal is not a directive."""
+        import io
+        import tokenize
+        try:
+            tokens = list(tokenize.generate_tokens(
+                io.StringIO(self.source).readline))
+        except (tokenize.TokenError, IndentationError):
+            return
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            lineno = tok.start[0]
+            m = _DIRECTIVE_RE.search(tok.string)
+            if not m:
+                continue
+            target = None
+            for info in self.functions:
+                node = info.node
+                if getattr(node, "lineno", None) == lineno:
+                    target = info
+                    break
+                end = getattr(node, "end_lineno", node.lineno)
+                if node.lineno <= lineno <= end:
+                    if target is None or node.lineno > target.node.lineno:
+                        target = info
+            if target is not None:
+                target.directives[m.group(1)] = m.group(2)
+
+    # -- traced-body discovery ------------------------------------------
+
+    def _mark_traced(self):
+        for info in self.functions:
+            if not isinstance(info.node, ast.Lambda):
+                self._mark_if_jit_decorated(info)
+        for call in self.walk_calls(self.tree):
+            tail = call_tail(call)
+            if tail not in _TRACING_WRAPPERS:
+                continue
+            scope = self.enclosing(call)
+            reason = tail
+            static = self._static_argnames(call) if tail == "jit" else set()
+            for arg in call.args:
+                for fn in self._resolve_function_args(arg, scope):
+                    if not fn.traced:
+                        fn.traced = True
+                        fn.traced_reason = reason
+                        fn.static_params |= static
+                if tail == "pallas_call":
+                    break  # only the first positional arg is the kernel
+
+    def _mark_if_jit_decorated(self, info: FuncInfo):
+        for deco in getattr(info.node, "decorator_list", []):
+            name = dotted_name(deco)
+            if name and name.rsplit(".", 1)[-1] == "jit":
+                info.traced, info.traced_reason = True, "jit"
+                return
+            if isinstance(deco, ast.Call):
+                tail = call_tail(deco)
+                if tail == "jit":
+                    info.traced, info.traced_reason = True, "jit"
+                    info.static_params |= self._static_argnames(deco)
+                    return
+                if tail == "partial" and deco.args:
+                    inner = dotted_name(deco.args[0])
+                    if inner and inner.rsplit(".", 1)[-1] == "jit":
+                        info.traced, info.traced_reason = True, "jit"
+                        info.static_params |= self._static_argnames(deco)
+                        return
+
+    @staticmethod
+    def _static_argnames(call: ast.Call) -> set[str]:
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                try:
+                    val = ast.literal_eval(kw.value)
+                except ValueError:
+                    return set()
+                if isinstance(val, str):
+                    return {val}
+                return set(val)
+        return set()
+
+    def _resolve_function_args(self, arg: ast.AST,
+                               scope: FuncInfo | None) -> list[FuncInfo]:
+        """Function bodies an argument expression may refer to: inline
+        lambdas, names of locally/module-defined functions, ``partial``
+        wrappers (inline or via a local alias), and list/tuple literals
+        of those (``lax.switch`` branches)."""
+        if isinstance(arg, ast.Lambda):
+            info = self._by_node.get(id(arg))
+            return [info] if info else []
+        if isinstance(arg, (ast.List, ast.Tuple)):
+            out = []
+            for elt in arg.elts:
+                out.extend(self._resolve_function_args(elt, scope))
+            return out
+        if isinstance(arg, ast.Call) and call_tail(arg) == "partial":
+            return (self._resolve_function_args(arg.args[0], scope)
+                    if arg.args else [])
+        if isinstance(arg, ast.Name):
+            if arg.id in self._partial_aliases:
+                inner = self._partial_aliases[arg.id]
+                if inner.args:
+                    return self._resolve_function_args(inner.args[0], scope)
+            fn = self.lookup(arg.id, scope)
+            return [fn] if fn else []
+        return []
+
+    # -- queries ---------------------------------------------------------
+
+    def lookup(self, name: str, scope: FuncInfo | None) -> FuncInfo | None:
+        """Resolve a simple name to a function defined in ``scope`` or any
+        enclosing scope (lexical)."""
+        while True:
+            found = self._scope_defs.get(
+                id(scope) if scope is not None else None, {}).get(name)
+            if found is not None:
+                return found
+            if scope is None:
+                return None
+            scope = scope.parent
+
+    def enclosing(self, node: ast.AST) -> FuncInfo | None:
+        """Innermost function whose span contains ``node`` (by position)."""
+        lineno = getattr(node, "lineno", None)
+        if lineno is None:
+            return None
+        best = None
+        for info in self.functions:
+            n = info.node
+            end = getattr(n, "end_lineno", n.lineno)
+            if n.lineno <= lineno <= end:
+                if best is None or n.lineno >= best.node.lineno:
+                    best = info
+        return best
+
+    def symbol_at(self, node: ast.AST) -> str:
+        info = self.enclosing(node)
+        return info.qualname if info else "<module>"
+
+    @staticmethod
+    def walk_calls(root: ast.AST):
+        for node in ast.walk(root):
+            if isinstance(node, ast.Call):
+                yield node
+
+    def own_body_walk(self, info: FuncInfo):
+        """Walk a function's AST *excluding* nested function subtrees."""
+        stack = [n for n in info.body_nodes()
+                 if not isinstance(n, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef, ast.Lambda))]
+        while stack:
+            node = stack.pop()
+            yield node
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.Lambda)):
+                    continue
+                stack.append(child)

@@ -1,0 +1,31 @@
+"""Diagnostic record + formatting shared by every rule module."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    """One finding.
+
+    Attributes:
+        rule: rule id (e.g. ``"SPMD001"``).
+        path: file the finding is in (as given to the engine).
+        line: 1-based line number.
+        col: 0-based column offset.
+        message: human-readable explanation.
+        symbol: dotted in-file qualname of the enclosing function (or
+            ``"<module>"``) — the key waivers match against.
+    """
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    symbol: str = "<module>"
+    waived_by: str | None = field(default=None, compare=False)
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}:{self.col + 1}"
+        tag = " (waived)" if self.waived_by else ""
+        return f"{loc}: {self.rule} {self.message} [{self.symbol}]{tag}"

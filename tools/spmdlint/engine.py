@@ -1,0 +1,118 @@
+"""File walking, rule dispatch, waiver application, CLI entry point."""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from . import rules_kernel, rules_registry, rules_spmd, rules_trace
+from .astutil import ModuleInfo
+from .diagnostics import Diagnostic
+from .waivers import Config, load_config
+
+_SKIP_DIRS = {"__pycache__", ".git", ".ruff_cache", ".pytest_cache",
+              "node_modules", ".venv", "venv"}
+
+
+def iter_py_files(paths: list[str]):
+    for path in paths:
+        if os.path.isfile(path):
+            if path.endswith(".py"):
+                yield path
+            continue
+        for root, dirs, files in os.walk(path):
+            dirs[:] = sorted(d for d in dirs if d not in _SKIP_DIRS)
+            for name in sorted(files):
+                if name.endswith(".py"):
+                    yield os.path.join(root, name)
+
+
+def lint_source(path: str, source: str,
+                config: Config | None = None) -> list[Diagnostic]:
+    """Lint one in-memory module; returns diagnostics with ``waived_by``
+    filled in for waived findings (callers filter on it)."""
+    config = config or Config(waivers=[])
+    try:
+        mod = ModuleInfo(path, source)
+    except SyntaxError as e:
+        return [Diagnostic(rule="E999", path=path, line=e.lineno or 1,
+                           col=(e.offset or 1) - 1,
+                           message=f"syntax error: {e.msg}")]
+    axes = (config.axes if config.axes is not None
+            else rules_spmd.DEFAULT_AXES)
+    diags: list[Diagnostic] = []
+    diags.extend(rules_spmd.check(mod, allowed_axes=axes))
+    diags.extend(rules_trace.check(mod))
+    diags.extend(rules_kernel.check(mod))
+    diags.extend(rules_registry.check(mod))
+    diags.sort(key=lambda d: (d.line, d.col, d.rule))
+    return [_apply_waivers(d, config) for d in diags]
+
+
+def _apply_waivers(diag: Diagnostic, config: Config) -> Diagnostic:
+    for waiver in config.waivers:
+        if waiver.matches(diag):
+            return Diagnostic(rule=diag.rule, path=diag.path,
+                              line=diag.line, col=diag.col,
+                              message=diag.message, symbol=diag.symbol,
+                              waived_by=waiver.reason or "waived")
+    return diag
+
+
+def lint_paths(paths: list[str],
+               config: Config | None = None) -> list[Diagnostic]:
+    diags: list[Diagnostic] = []
+    for path in iter_py_files(paths):
+        with open(path, encoding="utf-8") as fh:
+            source = fh.read()
+        diags.extend(lint_source(path, source, config))
+    return diags
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.spmdlint",
+        description="repo-specific SPMD/trace-safety/kernel/registry "
+                    "static analysis (rule catalog: DESIGN.md §12)")
+    parser.add_argument("paths", nargs="*",
+                        help="files or directories to lint")
+    parser.add_argument("--waivers", default="spmdlint.toml",
+                        help="waiver file (default: ./spmdlint.toml)")
+    parser.add_argument("--no-waivers", action="store_true",
+                        help="report waived findings as failures too")
+    parser.add_argument("--show-waived", action="store_true",
+                        help="also print waived findings")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    parser.add_argument("--self-test", action="store_true",
+                        help="run the built-in per-rule fixture suite")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        from . import RULES
+        for rule, text in sorted(RULES.items()):
+            print(f"{rule}  {text}")
+        return 0
+    if args.self_test:
+        from .selftest import run_self_test
+        return run_self_test()
+    if not args.paths:
+        parser.error("no paths given (or use --list-rules / --self-test)")
+
+    config = load_config(None if args.no_waivers else args.waivers)
+    diags = lint_paths(args.paths, config)
+    active = [d for d in diags if d.waived_by is None]
+    waived = [d for d in diags if d.waived_by is not None]
+    for d in active:
+        print(d.format())
+    if args.show_waived:
+        for d in waived:
+            print(d.format())
+    unused = [w for w in config.waivers
+              if not any(w.matches(d) for d in diags)]
+    for w in unused:
+        print(f"note: unused waiver {w.rule} {w.path}"
+              f"{':' + w.symbol if w.symbol else ''}", file=sys.stderr)
+    print(f"spmdlint: {len(active)} finding(s), {len(waived)} waived, "
+          f"{sum(1 for _ in iter_py_files(args.paths))} file(s)")
+    return 1 if active else 0

@@ -1,0 +1,221 @@
+"""KER001-003 — Pallas kernel discipline (DESIGN.md §4b/§10, PR 6).
+
+* KER001: kernel bodies (the function handed to ``pl.pallas_call``, plus
+  every same-module helper reachable from it) may only call ops from a
+  Mosaic-lowerable allowlist — ``jnp``/``jax.lax``/``jax.nn`` elementwise
+  + reduction + iota + dot ops, ``pl.*`` primitives, ``pltpu.*`` DMA
+  plumbing, array methods, local helpers, and static Python builtins.
+  ``np.*``, ``print``, I/O, or arbitrary library calls fail lowering on a
+  real TPU even when the interpreter leg happily runs them.
+* KER002: a function calling ``pltpu.make_async_copy`` must also call
+  ``.start()`` and ``.wait()`` (the DMA semaphore pair) — a started copy
+  without a wait races the consumer, a wait without a start deadlocks.
+* KER003: every function invoking ``pl.pallas_call`` must validate its
+  tile-multiple shape contract first — either by calling a
+  ``*check_tiling*`` helper or by raising ``ValueError`` itself (the
+  PR 6 naming-ValueError contract). A bare ``assert`` vanishes under
+  ``python -O`` and reports nothing actionable.
+"""
+from __future__ import annotations
+
+import ast
+
+from .astutil import FuncInfo, ModuleInfo, call_tail, dotted_name
+from .diagnostics import Diagnostic
+
+JNP_ALLOW = {
+    "where", "sum", "maximum", "minimum", "full_like", "zeros_like",
+    "ones_like", "zeros", "ones", "full", "min", "max", "argmin",
+    "argmax", "exp", "tanh", "sqrt", "log", "abs", "square", "isfinite",
+    "isnan", "isinf", "clip", "dot", "float32", "bfloat16", "int32",
+    "uint32", "bool_", "logical_and", "logical_or", "logical_not",
+    "cumsum", "cummax", "reciprocal", "rint", "floor", "ceil", "sign",
+    "power", "mod", "broadcast_to", "expand_dims", "squeeze", "swapaxes",
+    "einsum", "add", "subtract", "multiply", "divide", "negative",
+    "concatenate", "stack",
+}
+LAX_ALLOW = {
+    "broadcasted_iota", "iota", "dot_general", "fori_loop", "cond",
+    "select", "select_n", "rsqrt", "exp", "max", "min", "add", "mul",
+    "sub", "div", "rem", "convert_element_type", "bitcast_convert_type",
+    "erf_inv", "integer_pow", "stop_gradient", "clamp", "reduce_max",
+    "reduce_min", "reduce_sum", "while_loop", "associative_scan",
+}
+NN_ALLOW = {"one_hot", "relu", "softmax", "logsumexp", "sigmoid", "gelu"}
+PL_ALLOW = {"when", "program_id", "num_programs", "load", "store", "ds",
+            "dslice", "dot", "multiple_of", "max_contiguous", "debug_print"}
+METHOD_ALLOW = {
+    "astype", "reshape", "sum", "min", "max", "argmin", "argmax", "any",
+    "all", "set", "add", "get", "swap", "mul", "start", "wait",
+    "squeeze", "transpose", "ravel",
+}
+BUILTIN_ALLOW = {"range", "len", "min", "max", "abs", "enumerate", "zip",
+                 "float", "int", "bool", "isinstance", "getattr",
+                 "tuple", "list", "dict", "sorted"}
+
+
+def check(mod: ModuleInfo) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    kernel_roots = [f for f in mod.functions
+                    if f.traced and f.traced_reason == "pallas_call"]
+    cluster = _reachable(mod, kernel_roots)
+    for info in cluster:
+        out.extend(_check_allowlist(mod, info, cluster))
+    out.extend(_check_dma_pairing(mod))
+    for info in mod.functions:
+        out.extend(_check_tiling_contract(mod, info))
+    return out
+
+
+def _reachable(mod: ModuleInfo, roots: list[FuncInfo]) -> list[FuncInfo]:
+    """Kernel bodies plus same-module functions they (transitively) call."""
+    seen: dict[int, FuncInfo] = {}
+    stack = list(roots)
+    while stack:
+        info = stack.pop()
+        if id(info) in seen:
+            continue
+        seen[id(info)] = info
+        for node in mod.own_body_walk(info):
+            if isinstance(node, ast.Call) and isinstance(node.func,
+                                                         ast.Name):
+                helper = mod.lookup(node.func.id, info)
+                if helper is not None:
+                    stack.append(helper)
+    return list(seen.values())
+
+
+def _check_allowlist(mod: ModuleInfo, info: FuncInfo,
+                     cluster: list[FuncInfo]) -> list[Diagnostic]:
+    cluster_ids = {id(f) for f in cluster}
+    out = []
+    for node in mod.own_body_walk(info):
+        if not isinstance(node, ast.Call):
+            continue
+        verdict = _call_allowed(mod, info, node, cluster_ids)
+        if verdict is not None:
+            out.append(Diagnostic(
+                rule="KER001", path=mod.path, line=node.lineno,
+                col=node.col_offset, message=verdict,
+                symbol=info.qualname))
+    return out
+
+
+def _call_allowed(mod, info, node: ast.Call,
+                  cluster_ids: set[int]) -> str | None:
+    """None when allowed, else the diagnostic message."""
+    name = dotted_name(node.func)
+    if name is None:
+        # method chain on a computed value (e.g. ``x.astype(f32).sum()``
+        # or ``ref.at[...].set(v)``): judge by the method name alone
+        if isinstance(node.func, ast.Attribute):
+            attr = node.func.attr
+            return (None if attr in METHOD_ALLOW else
+                    f"method .{attr}() is not on the kernel allowlist")
+        return None
+    parts = name.split(".")
+    root, tail = parts[0], parts[-1]
+    if root in ("np", "numpy"):
+        return (f"{name}() inside a Pallas kernel body — numpy does not "
+                "lower to Mosaic; use jnp")
+    if root == "jnp":
+        return (None if tail in JNP_ALLOW else
+                f"jnp.{tail} is not on the Mosaic-lowerable allowlist")
+    if root == "jax" or root == "lax":
+        ns = parts[1] if root == "jax" and len(parts) > 2 else root
+        if ns == "lax":
+            return (None if tail in LAX_ALLOW else
+                    f"lax.{tail} is not on the Mosaic-lowerable allowlist")
+        if ns == "nn":
+            return (None if tail in NN_ALLOW else
+                    f"jax.nn.{tail} is not on the Mosaic-lowerable "
+                    "allowlist")
+        return f"{name}() is not on the kernel allowlist"
+    if root == "pl":
+        return (None if tail in PL_ALLOW else
+                f"pl.{tail} is not allowed inside a kernel body")
+    if root == "pltpu":
+        return None          # DMA/semaphore plumbing is kernel-internal
+    if len(parts) == 1:
+        if tail in BUILTIN_ALLOW:
+            return None
+        helper = mod.lookup(tail, info)
+        if helper is not None and id(helper) in cluster_ids:
+            return None
+        # helpers imported from sibling kernel modules are linted where
+        # they are defined (they sit in that module's kernel cluster)
+        src = mod.imports.get(tail)
+        if src is not None and (src.startswith(".")
+                                or src.startswith("repro")):
+            return None
+        return (f"{tail}() is neither a Mosaic-lowerable op, a static "
+                "builtin, nor a local kernel helper")
+    if parts[-2:-1] and node.func and isinstance(node.func, ast.Attribute):
+        # dotted method on a named value (``sem.wait()``, ``x.astype()``)
+        return (None if tail in METHOD_ALLOW else
+                f"method .{tail}() is not on the kernel allowlist")
+    return f"{name}() is not on the kernel allowlist"
+
+
+def _has_method_call(root: ast.AST, attr: str) -> bool:
+    return any(isinstance(n, ast.Call)
+               and isinstance(n.func, ast.Attribute)
+               and n.func.attr == attr
+               for n in ast.walk(root))
+
+
+def _check_dma_pairing(mod: ModuleInfo) -> list[Diagnostic]:
+    """Each ``make_async_copy`` site must have SOME enclosing function
+    whose subtree calls both ``.start()`` and ``.wait()`` — the copy is
+    often built in a tiny ``dma(slot, tile)`` factory while the start and
+    wait live in sibling ``pl.when`` branches of the real kernel body."""
+    out = []
+    for call in mod.walk_calls(mod.tree):
+        if call_tail(call) != "make_async_copy":
+            continue
+        scope = mod.enclosing(call)
+        resolved, missing = False, ["start", "wait"]
+        probe = scope
+        while probe is not None:
+            has_start = _has_method_call(probe.node, "start")
+            has_wait = _has_method_call(probe.node, "wait")
+            if has_start and has_wait:
+                resolved = True
+                break
+            missing = [s for s, ok in (("start", has_start),
+                                       ("wait", has_wait)) if not ok]
+            probe = probe.parent
+        if not resolved:
+            out.append(Diagnostic(
+                rule="KER002", path=mod.path, line=call.lineno,
+                col=call.col_offset,
+                message="make_async_copy without a matching semaphore "
+                        f"{'/'.join(missing)}() in any enclosing function",
+                symbol=scope.qualname if scope else "<module>"))
+    return out
+
+
+def _check_tiling_contract(mod: ModuleInfo,
+                           info: FuncInfo) -> list[Diagnostic]:
+    if isinstance(info.node, ast.Lambda):
+        return []
+    calls = [n for n in mod.own_body_walk(info)
+             if isinstance(n, ast.Call) and call_tail(n) == "pallas_call"]
+    if not calls:
+        return []
+    has_check = any(
+        isinstance(n, ast.Call) and "check_tiling" in (call_tail(n) or "")
+        for n in mod.own_body_walk(info))
+    raises_value_error = any(
+        isinstance(n, ast.Raise) and n.exc is not None
+        and "ValueError" in ast.unparse(n.exc)
+        for n in mod.own_body_walk(info))
+    if has_check or raises_value_error:
+        return []
+    return [Diagnostic(
+        rule="KER003", path=mod.path, line=calls[0].lineno,
+        col=calls[0].col_offset,
+        message="pallas_call wrapper validates no tile-multiple shapes: "
+                "call _check_tiling (or raise a naming ValueError) before "
+                "launching the kernel — bare asserts vanish under -O",
+        symbol=info.qualname)]

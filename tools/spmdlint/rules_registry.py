@@ -1,0 +1,45 @@
+"""REG001 — registry call sites must declare capability kwargs explicitly.
+
+The engine dispatches on registry capabilities (``supports_moments``
+gates the fused assign+reduce path, ``supports_devices`` /
+``supports_warm_start`` gate the sharded and repartition front doors,
+``short`` names refiners in composed method strings). A registration
+relying on implicit defaults reads as "unknown capability" in review and
+silently loses the capability when the default changes — every call site
+states its contract.
+"""
+from __future__ import annotations
+
+from .astutil import ModuleInfo, call_tail
+from .diagnostics import Diagnostic
+
+#: registrar name -> kwargs every call site must pass explicitly
+REQUIRED = {
+    "register_assign_backend": ("supports_moments",),
+    "register_algorithm": ("supports_devices", "supports_warm_start"),
+    "register_refiner": ("short",),
+}
+
+
+def check(mod: ModuleInfo) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    for call in mod.walk_calls(mod.tree):
+        tail = call_tail(call)
+        required = REQUIRED.get(tail or "")
+        if required is None:
+            continue
+        if not call.args and not call.keywords:
+            continue  # zero-arg call: not a registration site
+        passed = {kw.arg for kw in call.keywords}
+        if any(kw.arg is None for kw in call.keywords):
+            continue  # **kwargs splat: capabilities forwarded verbatim
+        missing = [k for k in required if k not in passed]
+        if missing:
+            out.append(Diagnostic(
+                rule="REG001", path=mod.path, line=call.lineno,
+                col=call.col_offset,
+                message=f"{tail}(...) must declare "
+                        f"{', '.join(missing)} explicitly (capability "
+                        "kwargs are part of the registration contract)",
+                symbol=mod.symbol_at(call)))
+    return out

@@ -1,0 +1,137 @@
+"""SPMD001-003 — the paper's §4.1 communication discipline.
+
+* SPMD001: the only sanctioned collectives are the global reductions
+  ``psum`` / ``pmin`` / ``pmax`` / ``pmean`` (plus ``axis_index`` /
+  ``psum_scatter`` bookkeeping). Any call site of ``all_gather`` /
+  ``all_to_all`` / ``ppermute`` / ``pshuffle`` / ``pswapaxes`` is
+  flagged wherever it appears — a helper only ever matters once it is
+  wired into a shard_map body, and flagging at the definition catches it
+  before that wiring lands.
+* SPMD002: collectives taking an axis name as a *string literal* must
+  use a declared axis (``dist.rules``: ``shard``/``data``/``model``/
+  ``pod`` by default; override via ``[spmd] axes`` in spmdlint.toml).
+  Axis names passed as variables resolve to the same constants and are
+  out of scope here.
+* SPMD003: a ``# spmdlint: psum-budget=N`` directive on a ``def`` line
+  asserts that function's statically counted psum call sites — direct
+  ``lax.psum`` calls plus calls to locally defined helpers, weighted by
+  the helper's own count — equal N. This pins the documented per-round
+  communication budgets (eval/sharded.py and partition/refine.py: 4
+  psums/round) so a refactor that silently adds a collective fails lint.
+"""
+from __future__ import annotations
+
+import ast
+
+from .astutil import FuncInfo, ModuleInfo, call_tail, dotted_name
+from .diagnostics import Diagnostic
+
+FORBIDDEN = {"all_gather", "all_to_all", "ppermute", "pshuffle",
+             "pswapaxes"}
+#: collectives whose axis argument SPMD002 inspects: tail -> positional
+#: index of the axis-name argument
+_AXIS_ARG = {"psum": 1, "pmax": 1, "pmin": 1, "pmean": 1, "all_gather": 1,
+             "all_to_all": 1, "ppermute": 1, "axis_index": 0,
+             "psum_scatter": 1}
+DEFAULT_AXES = frozenset({"shard", "data", "model", "pod"})
+
+
+def check(mod: ModuleInfo, allowed_axes=DEFAULT_AXES) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    for call in mod.walk_calls(mod.tree):
+        tail = call_tail(call)
+        if tail in FORBIDDEN and _looks_like_lax(call):
+            out.append(Diagnostic(
+                rule="SPMD001", path=mod.path, line=call.lineno,
+                col=call.col_offset,
+                message=f"{tail} breaks the psum-only communication "
+                        "discipline (paper §4.1); restructure on global "
+                        "reductions or add a spmdlint.toml waiver",
+                symbol=mod.symbol_at(call)))
+        if tail in _AXIS_ARG:
+            axis = _axis_literal(call, _AXIS_ARG[tail])
+            if axis is not None and axis not in allowed_axes:
+                out.append(Diagnostic(
+                    rule="SPMD002", path=mod.path, line=call.lineno,
+                    col=call.col_offset,
+                    message=f"axis name {axis!r} is not a declared mesh "
+                            f"axis ({sorted(allowed_axes)}); use the "
+                            "dist.rules constants",
+                    symbol=mod.symbol_at(call)))
+    out.extend(_check_budgets(mod))
+    return out
+
+
+def _looks_like_lax(call: ast.Call) -> bool:
+    """True unless the callee is clearly a non-jax namespace (e.g. an
+    mpi4py-style ``comm.all_gather``) — bare names and jax/lax dotted
+    paths all count."""
+    name = dotted_name(call.func)
+    if name is None:
+        return False
+    parts = name.split(".")
+    return len(parts) == 1 or parts[0] in ("jax", "lax") or "lax" in parts
+
+
+def _axis_literal(call: ast.Call, pos: int) -> str | None:
+    for kw in call.keywords:
+        if kw.arg in ("axis_name", "axis"):
+            val = kw.value
+            return val.value if (isinstance(val, ast.Constant)
+                                 and isinstance(val.value, str)) else None
+    if len(call.args) > pos:
+        val = call.args[pos]
+        if isinstance(val, ast.Constant) and isinstance(val.value, str):
+            return val.value
+    return None
+
+
+# -- SPMD003: psum budgets ----------------------------------------------
+
+def _check_budgets(mod: ModuleInfo) -> list[Diagnostic]:
+    out = []
+    for info in mod.functions:
+        raw = info.directives.get("psum-budget")
+        if raw is None:
+            continue
+        try:
+            declared = int(raw)
+        except ValueError:
+            out.append(Diagnostic(
+                rule="SPMD003", path=mod.path, line=info.node.lineno,
+                col=info.node.col_offset,
+                message=f"unparseable psum-budget {raw!r} (expected an "
+                        "integer)", symbol=info.qualname))
+            continue
+        counted = _psum_weight(mod, info, set())
+        if counted != declared:
+            out.append(Diagnostic(
+                rule="SPMD003", path=mod.path, line=info.node.lineno,
+                col=info.node.col_offset,
+                message=f"psum budget mismatch: declared {declared}, "
+                        f"counted {counted} call site(s) (direct + via "
+                        "local helpers)", symbol=info.qualname))
+    return out
+
+
+def _psum_weight(mod: ModuleInfo, info: FuncInfo,
+                 visiting: set[int]) -> int:
+    """Static psum call-site count of one function: direct ``psum`` calls
+    in its own body (nested defs excluded) plus, per call to a locally
+    resolvable function, that helper's own weight."""
+    if id(info) in visiting:
+        return 0
+    visiting.add(id(info))
+    total = 0
+    for node in mod.own_body_walk(info):
+        if not isinstance(node, ast.Call):
+            continue
+        tail = call_tail(node)
+        if tail == "psum":
+            total += 1
+        elif tail is not None and "." not in (dotted_name(node.func) or "."):
+            helper = mod.lookup(tail, info)
+            if helper is not None:
+                total += _psum_weight(mod, helper, visiting)
+    visiting.discard(id(info))
+    return total

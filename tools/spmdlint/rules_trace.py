@@ -1,0 +1,210 @@
+"""TRC001-003 — trace-safety inside jitted / shard_mapped / scanned bodies.
+
+A *traced body* (astutil discovery) gets a forward taint pass: its
+parameters are traced values (minus statically-known ``static_argnames``),
+taint flows through arithmetic, calls, subscripts and assignments, and is
+*cut* by shape-metadata attribute access (``.shape``/``.ndim``/``.dtype``
+are static under tracing). Findings:
+
+* TRC001 — ``int()``/``float()``/``bool()``/``len()`` or ``.item()``/
+  ``.tolist()`` on a tainted value: concretization, raises
+  ``TracerIntegerConversionError``/``ConcretizationTypeError`` at trace
+  time (the PR 4 bug class). Conversions inside a ``try`` whose handler
+  catches a jax tracer error are *guarded concretizations* (the
+  documented ``balanced_kmeans`` warm-up pattern) and are exempt.
+* TRC002 — ``np.*``/``numpy.*`` call with a tainted argument: silently
+  constant-folds or crashes under trace; use ``jnp``.
+* TRC003 — Python ``if``/``while`` on a tainted test: host control flow
+  on device data; use ``jnp.where``/``lax.cond``/``lax.while_loop``.
+"""
+from __future__ import annotations
+
+import ast
+
+from .astutil import FuncInfo, ModuleInfo, dotted_name
+from .diagnostics import Diagnostic
+
+_CONVERTERS = {"int", "float", "bool", "len"}
+_CONV_METHODS = {"item", "tolist"}
+#: attribute reads that are static under tracing — they cut taint
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding",
+                 "weak_type"}
+_GUARD_MARKERS = ("Tracer", "Concretization", "jax.errors")
+
+
+def check(mod: ModuleInfo) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    for info in mod.functions:
+        if info.traced:
+            out.extend(_check_body(mod, info))
+    return out
+
+
+def _check_body(mod: ModuleInfo, info: FuncInfo) -> list[Diagnostic]:
+    tainted = set(info.params) - info.static_params
+    out: list[Diagnostic] = []
+    body = info.body_nodes()
+    for stmt in body:
+        _walk_stmt(mod, info, stmt, tainted, out)
+    return out
+
+
+def _walk_stmt(mod, info, stmt, tainted: set[str], out: list[Diagnostic]):
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        return  # nested bodies are analyzed on their own (when traced)
+    if isinstance(stmt, (ast.If, ast.While)):
+        if _is_tainted(stmt.test, tainted):
+            out.append(_diag(mod, stmt, "TRC003",
+                             f"Python {type(stmt).__name__.lower()!r} on a "
+                             "traced expression; use jnp.where / lax.cond "
+                             "/ lax.while_loop", info))
+        _scan_expr_tree(mod, info, stmt.test, tainted, out)
+        for sub in stmt.body + stmt.orelse:
+            _walk_stmt(mod, info, sub, tainted, out)
+        return
+    if isinstance(stmt, ast.Try):
+        guarded = _guards_tracer_errors(stmt)
+        for sub in stmt.body:
+            _walk_stmt(mod, info, sub, set() if guarded else tainted, out)
+        for handler in stmt.handlers:
+            for sub in handler.body:
+                _walk_stmt(mod, info, sub, tainted, out)
+        for sub in stmt.orelse + stmt.finalbody:
+            _walk_stmt(mod, info, sub, tainted, out)
+        return
+    if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+        value = stmt.value
+        if value is not None:
+            _scan_expr_tree(mod, info, value, tainted, out)
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            is_tainted = _is_tainted(value, tainted)
+            for tgt in targets:
+                for name in _target_names(tgt):
+                    if is_tainted:
+                        tainted.add(name)
+                    else:
+                        tainted.discard(name)
+        return
+    if isinstance(stmt, (ast.For,)):
+        _scan_expr_tree(mod, info, stmt.iter, tainted, out)
+        if _is_tainted(stmt.iter, tainted):
+            for name in _target_names(stmt.target):
+                tainted.add(name)
+        for sub in stmt.body + stmt.orelse:
+            _walk_stmt(mod, info, sub, tainted, out)
+        return
+    if isinstance(stmt, (ast.With,)):
+        for item in stmt.items:
+            _scan_expr_tree(mod, info, item.context_expr, tainted, out)
+        for sub in stmt.body:
+            _walk_stmt(mod, info, sub, tainted, out)
+        return
+    # generic statement: scan all expressions, skip nested defs
+    for child in ast.iter_child_nodes(stmt):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            continue
+        if isinstance(child, ast.expr):
+            _scan_expr_tree(mod, info, child, tainted, out)
+        elif isinstance(child, ast.stmt):
+            _walk_stmt(mod, info, child, tainted, out)
+
+
+def _scan_expr_tree(mod, info, expr, tainted, out):
+    for node in ast.walk(expr):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        args_tainted = any(_is_tainted(a, tainted) for a in node.args)
+        if name in _CONVERTERS and args_tainted:
+            out.append(_diag(
+                mod, node, "TRC001",
+                f"{name}() on a traced value concretizes at trace time"
+                + ("; use x.shape[0]" if name == "len" else
+                   "; keep it an array or hoist to a static argument"),
+                info))
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr in _CONV_METHODS
+              and _is_tainted(node.func.value, tainted)):
+            out.append(_diag(
+                mod, node, "TRC001",
+                f".{node.func.attr}() on a traced value concretizes at "
+                "trace time", info))
+        elif (name and name.split(".", 1)[0] in ("np", "numpy")
+              and (args_tainted
+                   or any(_is_tainted(kw.value, tainted)
+                          for kw in node.keywords))):
+            out.append(_diag(
+                mod, node, "TRC002",
+                f"{name}() on a traced value constant-folds or crashes "
+                "under trace; use jnp", info))
+
+
+def _is_tainted(expr: ast.AST, tainted: set[str]) -> bool:
+    if isinstance(expr, ast.Name):
+        return expr.id in tainted
+    if isinstance(expr, ast.Attribute):
+        if expr.attr in _STATIC_ATTRS:
+            return False
+        return _is_tainted(expr.value, tainted)
+    if isinstance(expr, ast.Subscript):
+        return _is_tainted(expr.value, tainted)
+    if isinstance(expr, ast.Call):
+        return (any(_is_tainted(a, tainted) for a in expr.args)
+                or any(_is_tainted(kw.value, tainted)
+                       for kw in expr.keywords))
+    if isinstance(expr, ast.BinOp):
+        return _is_tainted(expr.left, tainted) or _is_tainted(expr.right,
+                                                              tainted)
+    if isinstance(expr, ast.UnaryOp):
+        return _is_tainted(expr.operand, tainted)
+    if isinstance(expr, ast.BoolOp):
+        return any(_is_tainted(v, tainted) for v in expr.values)
+    if isinstance(expr, ast.Compare):
+        # `x is None` / `x is not None` are static structural checks on
+        # the python object, never on traced data
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in expr.ops):
+            return False
+        return (_is_tainted(expr.left, tainted)
+                or any(_is_tainted(c, tainted) for c in expr.comparators))
+    if isinstance(expr, ast.IfExp):
+        return (_is_tainted(expr.body, tainted)
+                or _is_tainted(expr.orelse, tainted))
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return any(_is_tainted(e, tainted) for e in expr.elts)
+    if isinstance(expr, ast.Starred):
+        return _is_tainted(expr.value, tainted)
+    return False
+
+
+def _target_names(tgt: ast.AST) -> list[str]:
+    if isinstance(tgt, ast.Name):
+        return [tgt.id]
+    if isinstance(tgt, (ast.Tuple, ast.List)):
+        out = []
+        for elt in tgt.elts:
+            out.extend(_target_names(elt))
+        return out
+    if isinstance(tgt, ast.Starred):
+        return _target_names(tgt.value)
+    return []
+
+
+def _guards_tracer_errors(stmt: ast.Try) -> bool:
+    for handler in stmt.handlers:
+        if handler.type is None:
+            continue
+        src = ast.unparse(handler.type)
+        if any(marker in src for marker in _GUARD_MARKERS):
+            return True
+    return False
+
+
+def _diag(mod, node, rule, message, info: FuncInfo) -> Diagnostic:
+    return Diagnostic(rule=rule, path=mod.path, line=node.lineno,
+                      col=node.col_offset, message=message,
+                      symbol=info.qualname)

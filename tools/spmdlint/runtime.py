@@ -1,0 +1,171 @@
+"""Runtime companion to the static pass: retrace sentinel + sanitizers.
+
+Static analysis cannot see whether a *steady-state* call path recompiles
+— a config object that hashes by identity, a shape that wobbles between
+calls, or a fresh lru key per step all type-check fine and then retrace
+on every call, which at the paper's scale turns an O(ms) dispatch into
+an O(s) compile. This module watches the repo's hot entry points:
+
+* jitted functions (``_cache_size()``): ``core.partitioner._run_jit`` /
+  ``_run_warm_jit`` (the ``partition``/``repartition`` front doors) and
+  ``partition.batched._bucket_jit`` / ``_batched_jit`` / ``_single_jit``
+  (the ``PartitionServer`` bucket dispatch);
+* lru-cached shard_map builders (``cache_info().misses``):
+  ``partition.distributed._build_runner``, ``eval.sharded
+  ._build_metrics_fn``, ``partition.refine._build_lp_runner``.
+
+Use :class:`RetraceSentinel` directly, or as the ``retrace_sentinel``
+pytest fixture::
+
+    pytest -p tools.spmdlint.runtime ...
+
+    def test_serving_steady_state(retrace_sentinel):
+        server.step(...)                   # warm-up: compiles are fine
+        with retrace_sentinel() as s:
+            server.step(...)               # steady state
+        s.assert_steady()                  # raises RetraceError on growth
+
+The plugin also ships an opt-in sanitizer mode (``--spmdlint-sanitize``
+or ``SPMDLINT_SANITIZE=1``): every test runs under
+``jax.checking_leaks`` with ``jax_debug_nans`` enabled, surfacing leaked
+tracers and silent NaN production at their source instead of three
+layers downstream.
+"""
+from __future__ import annotations
+
+import importlib
+import os
+
+#: (label, module, attribute) of every watched hot entry point
+HOT_ENTRY_POINTS: tuple[tuple[str, str, str], ...] = (
+    ("partition", "repro.core.partitioner", "_run_jit"),
+    ("repartition", "repro.core.partitioner", "_run_warm_jit"),
+    ("serve.bucket", "repro.partition.batched", "_bucket_jit"),
+    ("serve.batched", "repro.partition.batched", "_batched_jit"),
+    ("serve.single", "repro.partition.batched", "_single_jit"),
+    ("sharded.runner", "repro.partition.distributed", "_build_runner"),
+    ("sharded.metrics", "repro.eval.sharded", "_build_metrics_fn"),
+    ("refine.runner", "repro.partition.refine", "_build_lp_runner"),
+)
+
+
+class RetraceError(AssertionError):
+    """A watched entry point recompiled during a steady-state window."""
+
+
+def _compile_count(fn) -> int | None:
+    """Best-effort compile/trace counter for one entry point: jitted
+    functions expose ``_cache_size()``; lru-cached builders expose
+    ``cache_info().misses`` (each miss builds + compiles a new runner)."""
+    cache_size = getattr(fn, "_cache_size", None)
+    if callable(cache_size):
+        try:
+            return int(cache_size())
+        except Exception:
+            return None
+    cache_info = getattr(fn, "cache_info", None)
+    if callable(cache_info):
+        return int(cache_info().misses)
+    return None
+
+
+class RetraceSentinel:
+    """Snapshot/compare compile counts over the hot entry points.
+
+    Extra callables can be watched with :meth:`track` (used by the
+    planted-recompilation acceptance test). Use as a context manager
+    around the steady-state window, then :meth:`assert_steady`.
+    """
+
+    def __init__(self, extra: dict | None = None):
+        self._fns: dict[str, object] = {}
+        for label, module, attr in HOT_ENTRY_POINTS:
+            try:
+                mod = importlib.import_module(module)
+            except Exception:
+                continue  # optional surface not importable in this env
+            fn = getattr(mod, attr, None)
+            if fn is not None and _compile_count(fn) is not None:
+                self._fns[label] = fn
+        for label, fn in (extra or {}).items():
+            self.track(label, fn)
+        self._baseline: dict[str, int] = {}
+
+    def track(self, label: str, fn) -> None:
+        if _compile_count(fn) is None:
+            raise TypeError(
+                f"{label}: {fn!r} exposes neither _cache_size() (jit) "
+                "nor cache_info() (lru builder); nothing to watch")
+        self._fns[label] = fn
+
+    def snapshot(self) -> dict[str, int]:
+        return {label: _compile_count(fn)
+                for label, fn in self._fns.items()}
+
+    def __enter__(self) -> "RetraceSentinel":
+        self._baseline = self.snapshot()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        return None
+
+    def deltas(self) -> dict[str, int]:
+        """Compiles since the last ``__enter__`` (only nonzero entries)."""
+        now = self.snapshot()
+        return {label: now[label] - self._baseline.get(label, now[label])
+                for label in now
+                if now[label] != self._baseline.get(label, now[label])}
+
+    def assert_steady(self) -> None:
+        """Raise :class:`RetraceError` if anything compiled in-window."""
+        grew = self.deltas()
+        if grew:
+            detail = ", ".join(f"{k}: +{v}" for k, v in sorted(grew.items()))
+            raise RetraceError(
+                f"steady-state retrace detected ({detail}); a static "
+                "argument is hashing by identity or a shape/dtype is "
+                "wobbling between calls — see tools/spmdlint/runtime.py")
+
+
+# --------------------------------------------------------------------------
+# pytest plugin
+
+
+def pytest_addoption(parser):
+    group = parser.getgroup("spmdlint")
+    group.addoption(
+        "--spmdlint-sanitize", action="store_true", default=False,
+        help="run every test under jax.checking_leaks with "
+             "jax_debug_nans enabled (also: SPMDLINT_SANITIZE=1)")
+
+
+def _sanitize_enabled(config) -> bool:
+    return (config.getoption("--spmdlint-sanitize", default=False)
+            or os.environ.get("SPMDLINT_SANITIZE", "") == "1")
+
+
+def pytest_configure(config):
+    if _sanitize_enabled(config):
+        import jax
+        jax.config.update("jax_debug_nans", True)
+
+
+try:
+    import pytest
+except ImportError:                                    # pragma: no cover
+    pytest = None
+
+if pytest is not None:
+    @pytest.fixture
+    def retrace_sentinel():
+        """Factory for :class:`RetraceSentinel` context managers."""
+        return RetraceSentinel
+
+    @pytest.hookimpl(hookwrapper=True)
+    def pytest_runtest_call(item):
+        if _sanitize_enabled(item.config):
+            import jax
+            with jax.checking_leaks():
+                yield
+        else:
+            yield
