@@ -93,6 +93,10 @@ class BKMConfig:
 
 
 def _reduce(x, axis_name, op="sum"):
+    # axis_name may be a single mesh axis or a tuple of axes (the 2-D
+    # hierarchical mesh reduces over ("coarse", "refine") — jax sums over
+    # the flattened product, bit-identical to the 1-D mesh of the same
+    # device order)
     if axis_name is None:
         return x
     if op == "sum":
@@ -257,6 +261,9 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
 
     ``points`` are the (local shard of) points, *already permuted randomly*
     if warm-up is enabled. ``centers0`` must be identical on all shards.
+    ``axis_name`` is a mesh axis name or a tuple of axis names (the 2-D
+    hierarchical mesh passes ``("coarse", "refine")``; every reduction
+    then psums over the flattened axis product).
     ``target_weight`` overrides the per-cluster balance target (default
     total_weight / k); the hierarchical engine passes the *global* target
     here so every refinement subproblem balances against the same bar and
@@ -334,7 +341,11 @@ def balanced_kmeans(points, cfg: BKMConfig, weights=None, centers0=None,
         # sample size doubles per round; local prefix of the permutation
         frac = jnp.minimum((cfg.warmup_start * 2.0 ** it) / n_global, 1.0)
         s_local = jnp.ceil(frac * n).astype(jnp.int32)
-        return (jnp.arange(n) < s_local).astype(dtype)
+        # explicit int32: the per-shard slot index is int32 by kernel
+        # contract (the sharded front door enforces ceil(n/P) <= 2**31-1
+        # via partition.distributed.check_index_capacity — global
+        # position arithmetic stays int64 on the host side)
+        return (jnp.arange(n, dtype=jnp.int32) < s_local).astype(dtype)
 
     hist_len = cfg.max_iter
 

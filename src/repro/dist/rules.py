@@ -38,6 +38,14 @@ _POD = "pod"
 # geometric partitioner (repro.partition.distributed)
 PARTITION_AXIS = "shard"
 
+# axis names of the 2-D hierarchical-partitioner mesh: the coarse k1-way
+# cut shards its points over the *product* of both axes (so it is
+# bit-identical to the flat 1-D run over P1*P2 devices — a psum over
+# ("coarse", "refine") reduces in the same flattened device order), and
+# the k1 refinement blocks then batch over REFINE_AXIS alone
+COARSE_AXIS = "coarse"
+REFINE_AXIS = "refine"
+
 
 def partition_mesh(devices: int | None = None,
                    axis_name: str = PARTITION_AXIS) -> Mesh:
@@ -58,6 +66,30 @@ def partition_mesh(devices: int | None = None,
             f"--xla_force_host_platform_device_count={devices} before the "
             f"first jax import")
     return Mesh(np.asarray(avail[:n]), (axis_name,))
+
+
+def partition_mesh2d(p1: int, p2: int) -> Mesh:
+    """2-D ``(COARSE_AXIS, REFINE_AXIS)`` device mesh for the hierarchical
+    sharded partitioner: the first ``p1 * p2`` visible devices reshaped to
+    ``[p1, p2]``, row-major.
+
+    The flattened device order equals ``partition_mesh(p1 * p2)``'s, which
+    is what makes the coarse pass (sharded over the axis *product*)
+    bit-identical to the flat 1-D run — same partial-sum placement, same
+    psum reduction order.
+    """
+    p1, p2 = int(p1), int(p2)
+    if p1 < 1 or p2 < 1:
+        raise ValueError(f"mesh extents must be >= 1, got ({p1}, {p2})")
+    avail = jax.devices()
+    if p1 * p2 > len(avail):
+        raise ValueError(
+            f"devices=({p1}, {p2}) needs {p1 * p2} devices but only "
+            f"{len(avail)} are visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={p1 * p2} before the "
+            f"first jax import")
+    return Mesh(np.asarray(avail[:p1 * p2]).reshape(p1, p2),
+                (COARSE_AXIS, REFINE_AXIS))
 
 
 def _batch_axes(mesh: Mesh):

@@ -45,15 +45,21 @@ def make_bkm_config(problem: PartitionProblem, k: int | None = None,
 
 @register_algorithm("geographer", aliases=("balanced_kmeans", "bkm"),
                     supports_devices=True, supports_warm_start=True)
-def _geographer(problem: PartitionProblem, devices: int | None = None,
-                bootstrap: str | None = None, **opts) -> PartitionResult:
+def _geographer(problem: PartitionProblem,
+                devices: int | tuple[int, int] | None = None,
+                bootstrap: str | None = None, chunk: int | None = None,
+                **opts) -> PartitionResult:
     if devices is not None:
         from .distributed import partition_sharded
         return partition_sharded(problem, devices,
-                                 bootstrap=bootstrap or "host", **opts)
+                                 bootstrap=bootstrap or "host",
+                                 chunk=chunk, **opts)
     if bootstrap is not None:
         raise TypeError("bootstrap= only applies to the multi-device path "
                         "(pass devices=)")
+    if chunk is not None:
+        raise TypeError("chunk= streams the sharded deal and only applies "
+                        "to the multi-device path (pass devices=)")
     cfg = make_bkm_config(problem, **opts)
     labels, centers, infl, stats = geographer_partition(
         problem.points, problem.k, weights=problem.weights, cfg=cfg,

@@ -69,6 +69,70 @@ def batched_balanced_kmeans(points, weights, centers0, cfg: BKMConfig,
     return _batched_jit(*args, cfg)
 
 
+@functools.lru_cache(maxsize=64)
+def _build_refine_runner(p1: int, p2: int, cfg: BKMConfig):
+    """Compile-cached shard_map driver batching refinement blocks over the
+    REFINE axis of the 2-D hierarchical mesh (dist.rules.partition_mesh2d).
+
+    The blocks shard over ``REFINE_AXIS`` alone and are replicated over
+    ``COARSE_AXIS`` (every coarse row computes the same block set — the
+    blocks are tiny, 1/k1 of the data each, so the redundancy is cheap
+    and keeps the body collective-free). ``check_rep=False`` because the
+    replication is by construction, not by collective.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.rules import REFINE_AXIS, partition_mesh2d
+
+    mesh = partition_mesh2d(p1, p2)
+
+    # every block solves locally on its refine-axis device — the
+    # refinement phase of the 2-D mesh is communication-free by design
+    # (the coarse pass owns the psum traffic), and the budget directive
+    # pins that: a refactor that adds a collective here fails lint
+    def local_blocks(p, w, c0, tw):   # spmdlint: psum-budget=0
+        def one(pp, ww, cc, tt):
+            return balanced_kmeans(pp, cfg, ww, cc, target_weight=tt)
+        return jax.vmap(one)(p, w, c0, tw)
+
+    spec = P(REFINE_AXIS)
+    return jax.jit(shard_map(local_blocks, mesh=mesh,
+                             in_specs=(spec, spec, spec, spec),
+                             out_specs=(spec, spec, spec, spec),
+                             check_rep=False))
+
+
+def sharded_batched_balanced_kmeans(points, weights, centers0,
+                                    cfg: BKMConfig, *, devices,
+                                    target_weight=None):
+    """Solve B refinement subproblems sharded over the refine axis of the
+    2-D ``(COARSE_AXIS, REFINE_AXIS)`` device mesh.
+
+    Same contract as ``batched_balanced_kmeans`` plus ``devices=(P1, P2)``;
+    the B blocks are padded to a multiple of P2 with copies of block 0
+    (their outputs are dropped), dealt P(REFINE_AXIS)-sharded, and each
+    device runs the plain local vmap. Every block still solves exactly
+    the same trace as the host vmap, so the results are *bit-for-bit
+    identical* to ``batched_balanced_kmeans`` (asserted by
+    tests/test_hierarchical_2d.py).
+    """
+    p1, p2 = (int(d) for d in devices)
+    pts, w, c0, tw = _prep(points, weights, centers0, cfg, target_weight)
+    B = pts.shape[0]
+    Bp = -(-B // p2) * p2                  # pad B to a multiple of P2
+    if Bp != B:
+        idx = jnp.concatenate([jnp.arange(B),
+                               jnp.zeros(Bp - B, jnp.int32)])
+        pts, w, c0, tw = (x[idx] for x in (pts, w, c0, tw))
+    run = _build_refine_runner(p1, p2, cfg)
+    A, C, infl, stats = run(pts, w, c0, tw)
+    if Bp != B:
+        A, C, infl = A[:B], C[:B], infl[:B]
+        stats = jax.tree.map(lambda x: x[:B], stats)
+    return A, C, infl, stats
+
+
 def sequential_balanced_kmeans(points, weights, centers0, cfg: BKMConfig,
                                target_weight=None):
     """Reference loop: same subproblems, one dispatch each. Bit-for-bit

@@ -9,11 +9,24 @@ bounding box [d]. This module is the actual SPMD driver for that claim:
   ``PartitionProblem``: points/weights split round-robin over P devices
   and padded to a common per-device ``cap`` (padding replicates real
   points at weight zero, so it perturbs no weighted sum and no bbox).
+  The deal preserves the source dtype (a float32 problem never takes a
+  float64 host copy), streams in bounded slot chunks (``chunk=``), and
+  can *placement-commit* each shard straight to its device
+  (``commit=True``) so the host never holds a full dealt copy of the
+  coordinates — peak host staging is O(n/P + chunk) beyond the index
+  arrays.
 * ``partition_sharded`` — lays the shards on a 1-D device mesh
   (``dist.rules.partition_mesh``), replicates centers/influence, and runs
   ``core.balanced_kmeans`` under ``shard_map`` with ``axis_name`` plumbed
   end-to-end, so every ``_reduce`` in the core becomes a ``psum`` /
   ``pmin`` / ``pmax`` — the paper's communication structure, nothing else.
+* ``devices=(P1, P2)`` — the same solve on the 2-D hierarchical mesh
+  (``dist.rules.partition_mesh2d``): points shard over the *product* of
+  the ``("coarse", "refine")`` axes, every reduction psums over the axis
+  tuple. The flattened device order equals the 1-D mesh's, so the run is
+  bit-identical to ``devices=P1*P2`` — this is what lets the hierarchical
+  engine (partition/hierarchical.py) keep its coarse cut exact while the
+  k1 refinements batch over the refine axis alone.
 
 SFC bootstrap (paper Alg. 2 lines 4-7) comes in two flavours:
 
@@ -25,6 +38,7 @@ SFC bootstrap (paper Alg. 2 lines 4-7) comes in two flavours:
   against the psum'd global bbox + global weighted-prefix-sum splitting
   over a psum'd key histogram. O(1)-sized communication, but 30-bit keys
   (vs 62-bit host keys), so centers may differ from the host bootstrap.
+  This is also the *out-of-core* bootstrap: no O(n) float64 host copy.
 
 Agreement with the single-device path (tested in
 tests/test_sharded_partition.py, documented in DESIGN.md §3b):
@@ -55,12 +69,87 @@ import numpy as np
 
 from repro.core.balanced_kmeans import BKMConfig, balanced_kmeans
 from repro.core.sfc import sfc_initial_centers, sfc_initial_centers_sharded
-from repro.dist.rules import PARTITION_AXIS, partition_mesh
+from repro.dist.rules import (COARSE_AXIS, PARTITION_AXIS, REFINE_AXIS,
+                              partition_mesh, partition_mesh2d)
 from repro.kernels.ops import backend_supports_moments, resolve_assign_backend
 
 from .problem import PartitionProblem, PartitionResult
 
 BOOTSTRAPS = ("host", "device")
+
+#: largest per-shard slot index the traced int32 index/label math can
+#: address (core.balanced_kmeans iotas, the assign kernels' index math)
+INT32_INDEX_CAP = np.iinfo(np.int32).max
+
+
+def _device_shape(devices) -> tuple[int, ...]:
+    """Normalize ``devices`` (int or (P1, P2) tuple) to a mesh shape."""
+    if isinstance(devices, (tuple, list)):
+        shape = tuple(int(d) for d in devices)
+        if len(shape) != 2:
+            raise ValueError(
+                f"devices tuple must be (P1, P2), got {devices!r}")
+        if min(shape) < 1:
+            raise ValueError(f"devices must be >= 1, got {devices!r}")
+        return shape
+    P = int(devices)
+    if P < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
+    return (P,)
+
+
+def _devices_stat(devices):
+    """JSON-friendly devices value for stats dicts (tuple -> list)."""
+    return list(devices) if isinstance(devices, (tuple, list)) \
+        else int(devices)
+
+
+def check_index_capacity(n: int, devices) -> int:
+    """Validate that the per-shard slot count fits the traced index dtype.
+
+    The round-robin layout gives every shard ``cap = ceil(n / P)`` slots.
+    Host-side global-position arithmetic is explicit int64 throughout
+    (``gather`` / ``scatter_labels`` address all n points), but the traced
+    per-shard index math — the warm-up iota in ``core.balanced_kmeans``
+    and the assign kernels' slot indexing — is int32 by kernel contract,
+    so ``cap`` must stay <= 2**31 - 1. Spreading the points over more
+    devices shrinks ``cap``, so the capacity grows with P (up to
+    ~2.1 billion points *per shard*).
+
+    Args:
+        n: global point count.
+        devices: shard count P, or a (P1, P2) mesh tuple.
+
+    Returns:
+        cap — the per-shard slot count ``ceil(n / P)``.
+
+    Raises:
+        ValueError: ``cap`` exceeds the int32 index capacity (names n,
+            P, cap, and the limit).
+    """
+    P = int(np.prod(_device_shape(devices)))
+    cap = -(-int(n) // P)                  # ceil(n / P)
+    if cap > INT32_INDEX_CAP:
+        raise ValueError(
+            f"per-shard slot count cap=ceil(n/P)={cap} overflows the "
+            f"int32 traced index capacity ({INT32_INDEX_CAP}) at "
+            f"n={n}, devices={P}; shard over more devices so that "
+            f"ceil(n/P) <= {INT32_INDEX_CAP}")
+    return cap
+
+
+def _mesh_for_shape(shape: tuple[int, ...]):
+    """The device mesh matching a ``_device_shape`` result."""
+    if len(shape) == 1:
+        return partition_mesh(shape[0])
+    return partition_mesh2d(*shape)
+
+
+def _mesh_spec(mesh):
+    """PartitionSpec sharding dim 0 over every axis of ``mesh``."""
+    from jax.sharding import PartitionSpec as P
+    names = mesh.axis_names
+    return P(names[0] if len(names) == 1 else names)
 
 
 @dataclass(frozen=True)
@@ -81,11 +170,17 @@ class ShardedPartitionProblem:
 
     Attributes:
         problem: the source ``PartitionProblem``.
-        devices: shard count P.
-        points: [P, cap, d] float64 — shard-major dealt coordinates.
-        weights: [P, cap] float64 — dealt weights; exactly 0.0 marks a
-            padded slot (the weight also carries the validity signal into
-            the jitted core, which treats ``w > 0`` as "real").
+        devices: flat shard count P (the product, for a 2-D mesh — the
+            layout depends only on P, never on the mesh factorization).
+        points: [P, cap, d] — shard-major dealt coordinates in the
+            *source* floating dtype (integer sources promote to float64;
+            there is no silent float64 up-cast of float32 problems). A
+            committed view (``commit=True``) holds a mesh-sharded
+            ``jax.Array`` here instead of host numpy.
+        weights: [P, cap] — dealt weights in the source floating dtype;
+            exactly 0 marks a padded slot (the weight also carries the
+            validity signal into the jitted core, which treats ``w > 0``
+            as "real"). Committed views hold a ``jax.Array``.
         gather: [P, cap] int64 — original point id of every slot
             (``labels[gather[valid]]`` scatters shard labels home).
         valid: [P, cap] bool — False for padded slots.
@@ -103,41 +198,116 @@ class ShardedPartitionProblem:
         return self.points.shape[1]
 
     @classmethod
-    def from_problem(cls, problem: PartitionProblem,
-                     devices: int) -> "ShardedPartitionProblem":
+    def from_problem(cls, problem: PartitionProblem, devices, *,
+                     chunk: int | None = None, commit: bool = False,
+                     dtype=None, mesh=None) -> "ShardedPartitionProblem":
         """Deal ``problem`` onto ``devices`` shards.
+
+        The deal streams in bounded slot slices: each slice gathers
+        ``P * min(chunk, cap)`` permuted points, so transient host
+        staging is O(P * chunk) on top of the output arrays
+        (``chunk=None`` = one-shot, a single full-cap slice — bit-
+        identical to any chunked setting). With ``commit=True`` the
+        dealt coordinates/weights go straight to their devices shard by
+        shard and the host never holds the full [P, cap, d] copy: peak
+        host staging drops to O(n/P + chunk) beyond the int64 ``gather``
+        index (which stays on the host for ``scatter_labels``).
 
         Args:
             problem: the instance to shard; its seed fixes the
                 permutation so re-sharding is deterministic.
-            devices: shard count P with ``1 <= P <= problem.n``.
+            devices: shard count P with ``1 <= P <= problem.n``, or a
+                (P1, P2) 2-D mesh shape (the layout only depends on the
+                product).
+            chunk: per-shard slots gathered per host slice (None = all).
+            commit: placement-commit each shard's points/weights to its
+                device (requires P <= visible jax devices); ``points`` /
+                ``weights`` become mesh-sharded ``jax.Array``s.
+            dtype: target dtype for committed arrays (None = the source
+                dtype; commit respects jax's x64 setting).
+            mesh: device mesh for ``commit`` (None = the 1-D or 2-D
+                partition mesh implied by ``devices``).
 
         Returns:
             The static-shape sharded view.
 
         Raises:
-            ValueError: P < 1 or P > n.
+            ValueError: P < 1, P > n, or an int32 index-capacity
+                overflow (``check_index_capacity``).
         """
-        P = int(devices)
-        if P < 1:
-            raise ValueError(f"devices must be >= 1, got {devices}")
+        shape = _device_shape(devices)
+        P = int(np.prod(shape))
         n = problem.n
         if P > n:
             raise ValueError(f"devices={P} exceeds n={n} points")
+        cap = check_index_capacity(n, P)
         rng = np.random.default_rng(problem.seed)
         perm = rng.permutation(n)
-        cap = -(-n // P)                       # ceil(n / P)
-        g = np.arange(P * cap).reshape(cap, P).T     # [P, cap] global pos
-        valid = g < n
-        gather = perm[g % n]
-        pts = np.asarray(problem.points, np.float64)[gather]
-        w = (np.ones(n, np.float64) if problem.weights is None
-             else np.asarray(problem.weights, np.float64))
-        weights = np.where(valid, w[gather], 0.0)
-        return cls(problem=problem, devices=P, points=pts, weights=weights,
+        src = np.asarray(problem.points)
+        pdtype = (src.dtype if np.issubdtype(src.dtype, np.floating)
+                  else np.dtype(np.float64))
+        if problem.weights is None:
+            w = np.ones(n, pdtype)
+        else:
+            w = np.asarray(problem.weights)
+            if not np.issubdtype(w.dtype, np.floating):
+                w = np.asarray(w, np.float64)
+        dim = src.shape[1]
+        step = cap if chunk is None else max(1, min(int(chunk), cap))
+        gather = np.empty((P, cap), np.int64)
+        valid = np.empty((P, cap), bool)
+
+        if not commit:
+            pts = np.empty((P, cap, dim), pdtype)
+            wts = np.empty((P, cap), w.dtype)
+            for s0 in range(0, cap, step):
+                s1 = min(s0 + step, cap)
+                # global positions of slot columns [s0, s1): g[p, j] =
+                # (s0+j)*P + p — explicit int64 so the position space
+                # P*cap never overflows a platform-default int32 arange
+                g = np.arange(s0 * P, s1 * P,
+                              dtype=np.int64).reshape(s1 - s0, P).T
+                v = g < n
+                gth = perm[g % n]
+                gather[:, s0:s1] = gth
+                valid[:, s0:s1] = v
+                pts[:, s0:s1] = src[gth]
+                wts[:, s0:s1] = np.where(v, w[gth], 0)
+            return cls(problem=problem, devices=P, points=pts,
+                       weights=wts, gather=gather, valid=valid)
+
+        # placement-commit path: build one shard at a time (O(cap) host
+        # staging), convert to the target dtype slice by slice, and push
+        # it to its device before touching the next shard
+        from jax.sharding import NamedSharding
+        mesh = mesh if mesh is not None else _mesh_for_shape(shape)
+        odtype = np.dtype(dtype) if dtype is not None else pdtype
+        sharding = NamedSharding(mesh, _mesh_spec(mesh))
+        devs = mesh.devices.reshape(-1)
+        ppieces, wpieces = [], []
+        for p in range(P):
+            pbuf = np.empty((1, cap, dim), odtype)
+            wbuf = np.empty((1, cap), odtype)
+            for s0 in range(0, cap, step):
+                s1 = min(s0 + step, cap)
+                g = np.arange(s0, s1, dtype=np.int64) * P + p
+                v = g < n
+                gth = perm[g % n]
+                gather[p, s0:s1] = gth
+                valid[p, s0:s1] = v
+                pbuf[0, s0:s1] = src[gth]
+                wbuf[0, s0:s1] = np.where(v, w[gth], 0)
+            ppieces.append(jax.device_put(pbuf, devs[p]))
+            wpieces.append(jax.device_put(wbuf, devs[p]))
+        pts = jax.make_array_from_single_device_arrays(
+            (P, cap, dim), sharding, ppieces)
+        wts = jax.make_array_from_single_device_arrays(
+            (P, cap), sharding, wpieces)
+        return cls(problem=problem, devices=P, points=pts, weights=wts,
                    gather=gather, valid=valid)
 
-    def deal(self, values: np.ndarray) -> np.ndarray:
+    def deal(self, values: np.ndarray,
+             chunk: int | None = None) -> np.ndarray:
         """Deal a per-point host array onto the shard layout.
 
         The inverse direction of ``scatter_labels``: original-point-order
@@ -147,31 +317,57 @@ class ShardedPartitionProblem:
 
         Args:
             values: [n, ...] array in original point order.
+            chunk: per-shard slots gathered per slice (None = one shot);
+                bit-identical to the one-shot gather for every setting.
 
         Returns:
-            [P, cap, ...] dealt array.
+            [P, cap, ...] dealt array (source dtype preserved).
         """
-        return np.asarray(values)[self.gather]
+        values = np.asarray(values)
+        if chunk is None:
+            return values[self.gather]
+        out = np.empty(self.gather.shape + values.shape[1:], values.dtype)
+        step = max(1, min(int(chunk), self.cap))
+        for s0 in range(0, self.cap, step):
+            s1 = min(s0 + step, self.cap)
+            out[:, s0:s1] = values[self.gather[:, s0:s1]]
+        return out
 
-    def scatter_labels(self, A: np.ndarray) -> np.ndarray:
+    def scatter_labels(self, A: np.ndarray,
+                       chunk: int | None = None) -> np.ndarray:
         """Scatter shard labels back home.
 
         Args:
             A: [P, cap] per-shard labels.
+            chunk: per-shard slots scattered per slice (None = one shot).
+                Every valid slot addresses a distinct original id, so the
+                chunked scatter is bit-identical to the one-shot write.
 
         Returns:
             [n] int64 labels in original point order (padded slots
             dropped).
         """
+        A = np.asarray(A)
         labels = np.empty(self.problem.n, np.int64)
-        labels[self.gather[self.valid]] = np.asarray(A)[self.valid]
+        step = self.cap if chunk is None else max(1, min(int(chunk),
+                                                         self.cap))
+        for s0 in range(0, self.cap, step):
+            s1 = min(s0 + step, self.cap)
+            v = self.valid[:, s0:s1]
+            labels[self.gather[:, s0:s1][v]] = A[:, s0:s1][v]
         return labels
 
 
 @functools.lru_cache(maxsize=64)
-def _build_runner(devices: int, cap: int, dim: int, cfg: BKMConfig,
+def _build_runner(devices, cap: int, dim: int, cfg: BKMConfig,
                   bootstrap: str, n_global: int):
     """Compile-cached shard_map driver for one (mesh, shapes, cfg) combo.
+
+    ``devices`` is an int (1-D ``PARTITION_AXIS`` mesh) or a (P1, P2)
+    tuple (2-D ``(COARSE_AXIS, REFINE_AXIS)`` mesh): the points shard
+    over the axis *product* and every reduction inside the core psums
+    over the axis tuple, so the 2-D run is bit-identical to the flat
+    P1*P2 run (same flattened device order, same partial-sum placement).
 
     ``bootstrap`` selects center seeding: "host" (centers0 computed on the
     host, passed in replicated), "device" (in-graph distributed SFC
@@ -183,8 +379,14 @@ def _build_runner(devices: int, cap: int, dim: int, cfg: BKMConfig,
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    mesh = partition_mesh(devices)
-    axis = PARTITION_AXIS
+    if isinstance(devices, tuple):
+        mesh = partition_mesh2d(*devices)
+        axis = (COARSE_AXIS, REFINE_AXIS)
+        spec = P(axis)
+    else:
+        mesh = partition_mesh(devices)
+        axis = PARTITION_AXIS
+        spec = P(axis)
 
     def local_fn(points, weights, centers0, influence0, prev_labels):
         points = points.reshape(cap, dim)
@@ -203,21 +405,31 @@ def _build_runner(devices: int, cap: int, dim: int, cfg: BKMConfig,
 
     inner = shard_map(
         local_fn, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(), P(), P(axis)),
-        out_specs=(P(axis), P(), P(), P()),
+        in_specs=(spec, spec, P(), P(), spec),
+        out_specs=(spec, P(), P(), P()),
         check_rep=False)
     return jax.jit(inner)
 
 
-def _prep_sharded_cfg(problem: PartitionProblem, devices: int,
-                      cfg: BKMConfig):
-    """Shard the problem and pin cfg's "auto" backend AND its fused
-    assign+reduce choice to concrete values *before* tracing the shard_map
-    body (both depend on process-global state, not trace-local state).
-    Returns (sharded, cfg). The fused sweep keeps the paper's psum-only
-    communication contract: per balance iteration one [k] size sum, per
-    movement iteration one [k, d] + one [k] moment sum."""
-    sp = ShardedPartitionProblem.from_problem(problem, devices)
+def _runner_key(devices):
+    """Hashable ``devices`` for the runner cache (tuple-or-int)."""
+    shape = _device_shape(devices)
+    return shape if len(shape) > 1 else shape[0]
+
+
+def _prep_sharded_cfg(problem: PartitionProblem, devices,
+                      cfg: BKMConfig, chunk: int | None = None):
+    """Shard the problem (placement-committed in the solve dtype, so the
+    drivers stage no further host copies) and pin cfg's "auto" backend AND
+    its fused assign+reduce choice to concrete values *before* tracing the
+    shard_map body (both depend on process-global state, not trace-local
+    state). Returns (sharded, cfg). The fused sweep keeps the paper's
+    psum-only communication contract: per balance iteration one [k] size
+    sum, per movement iteration one [k, d] + one [k] moment sum."""
+    shape = _device_shape(devices)
+    sp = ShardedPartitionProblem.from_problem(
+        problem, devices, chunk=chunk, commit=True, dtype=cfg.dtype,
+        mesh=_mesh_for_shape(shape))
     backend = resolve_assign_backend(cfg.assign_backend, sharded=True,
                                      n_local=sp.cap)
     fused = (backend_supports_moments(backend) if cfg.fused is None
@@ -227,19 +439,24 @@ def _prep_sharded_cfg(problem: PartitionProblem, devices: int,
     return sp, cfg
 
 
-def geographer_partition_sharded(problem: PartitionProblem, devices: int,
+def geographer_partition_sharded(problem: PartitionProblem, devices,
                                  cfg: BKMConfig | None = None,
-                                 bootstrap: str = "host"):
+                                 bootstrap: str = "host",
+                                 chunk: int | None = None):
     """Raw sharded (cold-start) run.
 
     Args:
         problem: the partitioning instance; its seed fixes the round-robin
             deal permutation.
-        devices: number of shards P (1 <= P <= problem.n).
+        devices: number of shards P (1 <= P <= problem.n), or a (P1, P2)
+            2-D mesh shape — bit-identical to the flat P1*P2 run.
         cfg: BKMConfig; None uses the problem's (k, epsilon) defaults.
         bootstrap: "host" (host-side SFC centers, identical to the
             single-device path) or "device" (in-graph distributed SFC
-            bootstrap).
+            bootstrap — also the out-of-core choice: no O(n) float64
+            host copy of the points).
+        chunk: per-shard slots per deal slice (streaming deal; None =
+            one shot — results are bit-identical either way).
 
     Returns:
         (labels [n] int64 in original point order, centers [k, d],
@@ -250,28 +467,28 @@ def geographer_partition_sharded(problem: PartitionProblem, devices: int,
         raise ValueError(f"bootstrap must be one of {BOOTSTRAPS}, "
                          f"got {bootstrap!r}")
     cfg = cfg or BKMConfig(k=problem.k, epsilon=problem.epsilon)
-    sp, cfg = _prep_sharded_cfg(problem, devices, cfg)
+    sp, cfg = _prep_sharded_cfg(problem, devices, cfg, chunk=chunk)
     if bootstrap == "host":
         centers0 = sfc_initial_centers(
             np.asarray(problem.points, np.float64), cfg.k, problem.weights)
     else:
         centers0 = np.zeros((cfg.k, problem.dim))      # ignored in-graph
-    run = _build_runner(sp.devices, sp.cap, problem.dim, cfg, bootstrap,
-                        problem.n)
-    pts = jnp.asarray(sp.points, cfg.dtype)
-    w = jnp.asarray(sp.weights, cfg.dtype)
-    A, centers, infl, stats = run(pts, w, jnp.asarray(centers0, cfg.dtype),
+    run = _build_runner(_runner_key(devices), sp.cap, problem.dim, cfg,
+                        bootstrap, problem.n)
+    A, centers, infl, stats = run(sp.points, sp.weights,
+                                  jnp.asarray(centers0, cfg.dtype),
                                   jnp.ones(cfg.k, cfg.dtype),
                                   jnp.zeros(sp.devices * sp.cap, jnp.int32))
-    labels = sp.scatter_labels(np.asarray(jax.device_get(A)))
+    labels = sp.scatter_labels(np.asarray(jax.device_get(A)), chunk=chunk)
     return labels, centers, infl, jax.tree.map(np.asarray, stats)
 
 
-def geographer_repartition_sharded(problem: PartitionProblem, devices: int,
+def geographer_repartition_sharded(problem: PartitionProblem, devices,
                                    centers0: np.ndarray,
                                    influence0: np.ndarray | None = None,
                                    cfg: BKMConfig | None = None,
-                                   prev_labels: np.ndarray | None = None):
+                                   prev_labels: np.ndarray | None = None,
+                                   chunk: int | None = None):
     """Raw sharded warm-start run: balanced k-means resumed from a previous
     partition's (centers0, influence0) state, no SFC bootstrap.
 
@@ -284,7 +501,7 @@ def geographer_repartition_sharded(problem: PartitionProblem, devices: int,
 
     Args:
         problem: the (possibly re-weighted / moved) partitioning instance.
-        devices: number of shards P.
+        devices: number of shards P, or a (P1, P2) 2-D mesh shape.
         centers0: [k, d] previous centers.
         influence0: [k] previous influence (None = ones).
         cfg: BKMConfig; ``warmup`` is forced off.
@@ -292,6 +509,13 @@ def geographer_repartition_sharded(problem: PartitionProblem, devices: int,
             given, an unchanged-and-still-balanced partition is re-emitted
             verbatim (no-op detection). Padded slots replicate real
             points, so the comparison is consistent across the deal.
+            ``repartition()`` always passes the previous labels; when a
+            direct caller omits them, a -1 sentinel is dealt instead —
+            it can never equal a real assignment (labels are >= 0), so
+            no-op detection and migration-style comparisons can never
+            fire on synthetic labels (locked by
+            tests/test_out_of_core.py).
+        chunk: per-shard slots per deal slice (None = one shot).
 
     Returns:
         (labels [n] int64, centers [k, d], influence [k], stats dict);
@@ -305,39 +529,46 @@ def geographer_repartition_sharded(problem: PartitionProblem, devices: int,
     if centers0.shape[0] != cfg.k:
         raise ValueError(f"centers0 has {centers0.shape[0]} rows, "
                          f"k={cfg.k}")
-    sp, cfg = _prep_sharded_cfg(problem, devices, cfg)
-    run = _build_runner(sp.devices, sp.cap, problem.dim, cfg, "warm",
-                        problem.n)
-    pts = jnp.asarray(sp.points, cfg.dtype)
-    w = jnp.asarray(sp.weights, cfg.dtype)
+    sp, cfg = _prep_sharded_cfg(problem, devices, cfg, chunk=chunk)
+    run = _build_runner(_runner_key(devices), sp.cap, problem.dim, cfg,
+                        "warm", problem.n)
     infl0 = (jnp.ones(cfg.k, cfg.dtype) if influence0 is None
              else jnp.asarray(influence0, cfg.dtype))
-    prev = (np.zeros((sp.devices, sp.cap), np.int32) if prev_labels is None
-            else sp.deal(np.asarray(prev_labels, np.int32)))
     if prev_labels is None:
-        # no previous labels -> disable no-op detection by making the
-        # dummy never match a real assignment
-        prev -= 1
-    A, centers, infl, stats = run(pts, w, jnp.asarray(centers0, cfg.dtype),
+        # synthetic sentinel: -1 never matches a real assignment (block
+        # ids are >= 0), so the no-op shortcut in the core cannot fire on
+        # a partition that never existed — the solver always re-assigns
+        # from (centers0, influence0)
+        prev = np.full((sp.devices, sp.cap), -1, np.int32)
+    else:
+        prev = sp.deal(np.asarray(prev_labels, np.int32), chunk=chunk)
+    A, centers, infl, stats = run(sp.points, sp.weights,
+                                  jnp.asarray(centers0, cfg.dtype),
                                   infl0,
                                   jnp.asarray(prev.reshape(-1), jnp.int32))
-    labels = sp.scatter_labels(np.asarray(jax.device_get(A)))
+    labels = sp.scatter_labels(np.asarray(jax.device_get(A)), chunk=chunk)
     return labels, centers, infl, jax.tree.map(np.asarray, stats)
 
 
-def partition_sharded(problem: PartitionProblem, devices: int, *,
-                      bootstrap: str = "host", **opts) -> PartitionResult:
+def partition_sharded(problem: PartitionProblem, devices, *,
+                      bootstrap: str = "host", chunk: int | None = None,
+                      **opts) -> PartitionResult:
     """Multi-device geographer partition of ``problem`` over ``devices``
     shards (the ``devices=`` path of the ``partition()`` front door).
 
     Args:
         problem: the partitioning instance (its seed fixes the shard
             layout permutation).
-        devices: number of shards P; must satisfy 1 <= P <= problem.n and
+        devices: number of shards P, or a (P1, P2) 2-D hierarchical mesh
+            shape (bit-identical to the flat P1*P2 run — the points shard
+            over the axis product); must satisfy 1 <= P <= problem.n and
             P <= len(jax.devices()).
         bootstrap: SFC center seeding — "host" (identical to the
             single-device path, the agreement default) or "device" (fully
-            in-graph distributed bootstrap, O(1)-sized communication).
+            in-graph distributed bootstrap, O(1)-sized communication, no
+            O(n) float64 host copy).
+        chunk: per-shard slots per deal slice — bounds transient host
+            staging during the deal without changing any result bit.
         **opts: BKMConfig field overrides, exactly as in the single-device
             adapter (e.g. ``max_iter=50``, ``warmup=False``); unknown
             fields raise TypeError.
@@ -351,29 +582,33 @@ def partition_sharded(problem: PartitionProblem, devices: int, *,
     from .algorithms import make_bkm_config
     cfg = make_bkm_config(problem, **opts)
     labels, centers, infl, stats = geographer_partition_sharded(
-        problem, devices, cfg=cfg, bootstrap=bootstrap)
+        problem, devices, cfg=cfg, bootstrap=bootstrap, chunk=chunk)
     return PartitionResult(
         labels=labels, k=problem.k, method="geographer", problem=problem,
         centers=np.asarray(centers), influence=np.asarray(infl),
         stats={"levels": [dict(stats)],
                "final_imbalance": float(stats["final_imbalance"]),
-               "devices": int(devices), "bootstrap": bootstrap})
+               "devices": _devices_stat(devices), "bootstrap": bootstrap})
 
 
-def repartition_sharded(problem: PartitionProblem, devices: int,
+def repartition_sharded(problem: PartitionProblem, devices,
                         centers0: np.ndarray,
                         influence0: np.ndarray | None = None,
                         prev_labels: np.ndarray | None = None,
+                        chunk: int | None = None,
                         **opts) -> PartitionResult:
     """Multi-device warm-started repartition (the ``devices=`` path of the
     ``repartition()`` front door).
 
     Args:
         problem: the perturbed partitioning instance.
-        devices: number of shards P.
+        devices: number of shards P, or a (P1, P2) 2-D mesh shape.
         centers0: [k, d] previous partition's centers.
         influence0: [k] previous partition's influence (None = ones).
-        prev_labels: [n] previous block ids (enables no-op detection).
+        prev_labels: [n] previous block ids (enables no-op detection;
+            ``repartition()`` always passes them — omitting them deals a
+            -1 sentinel that can never masquerade as a real assignment).
+        chunk: per-shard slots per deal slice (None = one shot).
         **opts: BKMConfig field overrides (``warmup`` is forced off).
 
     Returns:
@@ -385,11 +620,11 @@ def repartition_sharded(problem: PartitionProblem, devices: int,
     cfg = make_bkm_config(problem, **dict(opts, warmup=False))
     labels, centers, infl, stats = geographer_repartition_sharded(
         problem, devices, centers0, influence0, cfg=cfg,
-        prev_labels=prev_labels)
+        prev_labels=prev_labels, chunk=chunk)
     return PartitionResult(
         labels=labels, k=problem.k, method="geographer", problem=problem,
         centers=np.asarray(centers), influence=np.asarray(infl),
         stats={"levels": [dict(stats)],
                "final_imbalance": float(stats["final_imbalance"]),
                "iters": int(stats["iters"]),
-               "devices": int(devices), "warm_start": True})
+               "devices": _devices_stat(devices), "warm_start": True})

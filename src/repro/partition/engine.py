@@ -19,6 +19,14 @@ devices (points sharded, centers replicated, psum-only communication —
 see partition/distributed.py). Only methods registered with
 ``supports_devices`` accept it; with ``hierarchy`` the coarse cut runs
 distributed and the refinement stays a host-side batched vmap.
+
+``devices=(P1, P2)`` lays out the 2-D hierarchical device mesh instead
+(``dist.rules.partition_mesh2d``): the coarse cut shards its points over
+the *product* of the ("coarse", "refine") axes — bit-identical to the
+flat ``devices=P1*P2`` run — and with ``hierarchy`` the k1 refinements
+batch over the refine axis. ``chunk=N`` (a ``**opts`` pass-through to
+the geographer adapter) streams the sharded deal in bounded host slices
+without changing any result bit.
 """
 from __future__ import annotations
 
@@ -40,7 +48,7 @@ def _parse_hierarchy(hierarchy) -> tuple[int, int]:
 
 
 def partition(problem: PartitionProblem, method: str = "geographer", *,
-              hierarchy=None, devices: int | None = None,
+              hierarchy=None, devices: int | tuple[int, int] | None = None,
               refine=None, refine_eps: float | None = None,
               evaluate: bool = False,
               with_diameter: bool = False, **opts) -> PartitionResult:
@@ -55,7 +63,10 @@ def partition(problem: PartitionProblem, method: str = "geographer", *,
             two-level recursive partitioning with ``k1*k2 == problem.k``.
         devices: run the sharded multi-device path over P devices (method
             must be registered with ``supports_devices``; with
-            ``hierarchy``, the coarse cut is the distributed pass).
+            ``hierarchy``, the coarse cut is the distributed pass). A
+            ``(P1, P2)`` tuple uses the 2-D hierarchical mesh: the
+            coarse/flat solve is bit-identical to ``devices=P1*P2`` and
+            hierarchical refinement batches over the refine axis.
         refine: quality-recovery post-pass over the solver's labels —
             True (= ``"label_prop"``) or a refiner registry name (see
             ``repro.partition.refine``). Requires the problem to carry a

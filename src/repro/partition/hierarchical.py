@@ -28,7 +28,8 @@ import numpy as np
 from repro.core.sfc import sfc_initial_centers
 
 from .batched import (batched_balanced_kmeans, build_refinement_batch,
-                      sequential_balanced_kmeans)
+                      sequential_balanced_kmeans,
+                      sharded_batched_balanced_kmeans)
 from .problem import PartitionProblem, PartitionResult
 from .registry import get_algorithm, resolve_method, supports_devices
 
@@ -46,7 +47,8 @@ def hierarchical_partition(problem: PartitionProblem,
                            method: str = "geographer",
                            refine_method: str = "geographer",
                            batched: bool = True,
-                           devices: int | None = None,
+                           devices: int | tuple[int, int] | None = None,
+                           chunk: int | None = None,
                            coarse_epsilon: float | None = None,
                            coarse_opts: dict | None = None,
                            refine_opts: dict | None = None
@@ -62,9 +64,18 @@ def hierarchical_partition(problem: PartitionProblem,
         batched: run all k1 k-means refinements in a single jitted vmap
             dispatch (bit-for-bit equal to the sequential loop).
         devices: run the *coarse* cut on the sharded multi-device path
-            (the global pass is where the data is big); the per-block
-            refinement stays a host-side batched vmap over blocks that
-            are each 1/k1 of the data.
+            (the global pass is where the data is big). An int P keeps
+            the per-block refinement a host-side batched vmap; a
+            ``(P1, P2)`` tuple lays out the 2-D hierarchical mesh
+            (dist.rules.partition_mesh2d): the coarse cut shards its
+            points over the *product* of the ("coarse", "refine") axes —
+            bit-identical to the flat ``devices=P1*P2`` run — and the k1
+            refinement blocks then batch over the refine axis
+            (bit-identical to the host vmap), so the whole composition
+            matches the flat one label for label.
+        chunk: per-shard slots per deal slice of the coarse pass's
+            streaming deal (only meaningful with ``devices=``; see
+            partition/distributed.py — results are bit-identical).
         coarse_epsilon: balance budget of the coarse pass (default
             epsilon/2 — see the module docstring for why that composes).
         coarse_opts, refine_opts: per-level algorithm options.
@@ -89,6 +100,16 @@ def hierarchical_partition(problem: PartitionProblem,
                 f"coarse method {coarse_name!r} has no multi-device path; "
                 "devices= requires a supports_devices method")
         coarse_opts = dict(coarse_opts or {}, devices=devices)
+        if chunk is not None:
+            coarse_opts.setdefault("chunk", chunk)
+    elif chunk is not None:
+        raise ValueError("chunk= streams the sharded deal and needs "
+                         "devices=")
+    # a (P1, P2) tuple additionally shards the refinement blocks over the
+    # refine axis of the 2-D mesh (an int keeps the refinement host-side)
+    mesh2d = (tuple(int(d) for d in devices)
+              if isinstance(devices, (tuple, list)) else None)
+    dev_stat = list(mesh2d) if mesh2d is not None else devices
     eps = problem.epsilon
     # no refinement follows when k2 == 1, so the coarse pass gets the full
     # budget instead of the tightened split
@@ -110,7 +131,7 @@ def hierarchical_partition(problem: PartitionProblem,
             "k1": k1, "k2": 1,
             "levels": [
                 {"method": coarse_name, "k": k1, "epsilon": eps1,
-                 "devices": devices, "imbalance": coarse.imbalance()},
+                 "devices": dev_stat, "imbalance": coarse.imbalance()},
                 {"method": refine_name, "k": 1, "epsilon": eps,
                  "batched": False, "dispatches": 0},
             ],
@@ -138,11 +159,18 @@ def hierarchical_partition(problem: PartitionProblem,
             sfc_initial_centers(bpts[b, :counts[b]], k2,
                                 w_host[gather[b, :counts[b]]])
             for b in range(k1)])
-        runner = (batched_balanced_kmeans if batched
-                  else sequential_balanced_kmeans)
         target = problem.total_weight / (k1 * k2)
-        sub, centers, infl, stats = runner(bpts, bw, centers0, cfg,
-                                           target_weight=target)
+        if mesh2d is not None and batched:
+            # 2-D mesh: blocks over the refine axis, bit-for-bit equal to
+            # the host vmap (each block runs the identical trace)
+            sub, centers, infl, stats = sharded_batched_balanced_kmeans(
+                bpts, bw, centers0, cfg, devices=mesh2d,
+                target_weight=target)
+        else:
+            runner = (batched_balanced_kmeans if batched
+                      else sequential_balanced_kmeans)
+            sub, centers, infl, stats = runner(bpts, bw, centers0, cfg,
+                                               target_weight=target)
         sub = np.asarray(sub)
         for b in range(k1):
             ids = gather[b, :counts[b]]
@@ -151,7 +179,10 @@ def hierarchical_partition(problem: PartitionProblem,
             "imbalance_vs_global_target":
                 np.asarray(stats["final_imbalance"]).tolist(),
             "iters": np.asarray(stats["iters"]).tolist(),
-            "batched": batched, "dispatches": 1 if batched else k1}
+            "batched": batched, "dispatches": 1 if batched else k1,
+            "refine_devices": (list(mesh2d)
+                               if mesh2d is not None and batched
+                               else None)}
         centers_out = np.asarray(centers).reshape(k1 * k2, -1)
         infl_out = np.asarray(infl).reshape(k1 * k2)
     else:
@@ -176,7 +207,7 @@ def hierarchical_partition(problem: PartitionProblem,
         "k1": k1, "k2": k2,
         "levels": [
             {"method": coarse_name, "k": k1, "epsilon": eps1,
-             "devices": devices, "imbalance": coarse.imbalance()},
+             "devices": dev_stat, "imbalance": coarse.imbalance()},
             {"method": refine_name, "k": k2, "epsilon": eps,
              **refine_stats},
         ],

@@ -106,12 +106,15 @@ class PartitionProblem:
         import dataclasses
         return dataclasses.replace(self, **kw)
 
-    def to_sharded(self, devices: int):
+    def to_sharded(self, devices: int, chunk: int | None = None):
         """Static-shape sharded view for the multi-device engine: points
-        and weights dealt round-robin over ``devices`` shards and padded
-        to a common per-device cap (see partition/distributed.py)."""
+        and weights dealt round-robin over ``devices`` shards (source
+        dtype preserved) and padded to a common per-device cap; ``chunk``
+        streams the deal in bounded host slices with bit-identical
+        results (see partition/distributed.py)."""
         from .distributed import ShardedPartitionProblem
-        return ShardedPartitionProblem.from_problem(self, devices)
+        return ShardedPartitionProblem.from_problem(self, devices,
+                                                    chunk=chunk)
 
     def to_sharded_graph(self, devices: int):
         """Sharded CSR companion view for the distributed evaluation

@@ -1,0 +1,168 @@
+"""2-D device mesh: ``devices=(P1, P2)`` vs the flat ``devices=P1*P2``.
+
+The bit-identity contract (dist/rules.py, partition/distributed.py,
+partition/batched.py, DESIGN.md §13):
+
+* Flat solve — the points shard over the *product* of the
+  ("coarse", "refine") axes, and every psum/pmax names the axis tuple,
+  which reduces over exactly the same device set in the same order as
+  the flat 1-D mesh. Labels, centers and influence are bit-for-bit
+  identical to ``devices=P1*P2``.
+* Hierarchical solve — the coarse cut runs the same product-sharded
+  trace; the k1 refinements deal over the refine axis, where each block
+  runs the *same local trace* as the host ``vmap``
+  (``sharded_batched_balanced_kmeans``, psum-budget=0: refinement is
+  communication-free). Bit-for-bit identical to ``devices=P1*P2``
+  (coarse sharded + host-vmap refinement), including when k1 is not a
+  multiple of P2 (padding with copies of block 0, outputs dropped).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import meshes
+from repro.core.balanced_kmeans import BKMConfig
+from repro.dist.rules import partition_mesh2d
+from repro.partition import PartitionProblem, partition
+from repro.partition.batched import (batched_balanced_kmeans,
+                                     build_refinement_batch,
+                                     sharded_batched_balanced_kmeans)
+
+needs8 = pytest.mark.skipif(len(jax.devices()) < 8,
+                            reason="needs 8 (virtual) jax devices")
+
+
+@pytest.fixture(scope="module")
+def problem():
+    rng = np.random.default_rng(5)
+    n = 4099
+    return PartitionProblem(points=rng.random((n, 2)),
+                            weights=rng.uniform(0.5, 2.0, n),
+                            k=8, epsilon=0.05, seed=7)
+
+
+@pytest.fixture(scope="module")
+def mesh_problem():
+    mesh = meshes.REGISTRY["delaunay2d"](4096, seed=0)
+    return PartitionProblem.from_mesh(mesh, k=8, epsilon=0.03)
+
+
+class TestMesh2dConstruction:
+    def test_axis_names_and_shape(self):
+        mesh = partition_mesh2d(2, 4)
+        assert mesh.axis_names == ("coarse", "refine")
+        assert mesh.devices.shape == (2, 4)
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(ValueError):
+            partition_mesh2d(0, 4)
+        with pytest.raises(ValueError):
+            partition_mesh2d(2, 0)
+
+    def test_rejects_oversubscription(self):
+        with pytest.raises(ValueError, match="device"):
+            partition_mesh2d(64, 64)
+
+
+@needs8
+class TestFlat2dBitIdentity:
+    @pytest.mark.parametrize("shape", [(2, 4), (4, 2), (8, 1), (1, 8)])
+    def test_labels_match_flat_eight(self, problem, shape):
+        flat = partition(problem, devices=8)
+        two = partition(problem, devices=shape)
+        assert np.array_equal(flat.labels, two.labels)
+        assert np.array_equal(flat.centers, two.centers)
+        assert np.array_equal(flat.influence, two.influence)
+
+    def test_product_four_matches_flat_four(self, problem):
+        flat = partition(problem, devices=4)
+        two = partition(problem, devices=(2, 2))
+        assert np.array_equal(flat.labels, two.labels)
+
+    def test_stats_record_mesh_shape(self, problem):
+        res = partition(problem, devices=(2, 4))
+        assert res.stats["devices"] == [2, 4]
+
+    def test_chunk_composes_with_mesh2d(self, problem):
+        a = partition(problem, devices=(2, 4))
+        b = partition(problem, devices=(2, 4), chunk=13)
+        assert np.array_equal(a.labels, b.labels)
+
+
+@needs8
+class TestHierarchical2dBitIdentity:
+    @pytest.mark.parametrize("hier", [(4, 2), (2, 4)])
+    def test_hierarchy_matches_flat_devices(self, problem, hier):
+        flat = partition(problem, hierarchy=hier, devices=8)
+        two = partition(problem, hierarchy=hier, devices=(2, 4))
+        assert np.array_equal(flat.labels, two.labels)
+
+    def test_refine_stats_record_mesh(self, problem):
+        res = partition(problem, hierarchy=(4, 2), devices=(2, 4))
+        assert res.stats["levels"][1]["refine_devices"] == [2, 4]
+        assert res.stats["levels"][0]["devices"] == [2, 4]
+
+    def test_quality_mesh_matches_flat(self, mesh_problem):
+        flat = partition(mesh_problem, hierarchy=(4, 2), devices=8,
+                         evaluate=True)
+        two = partition(mesh_problem, hierarchy=(4, 2), devices=(2, 4),
+                        evaluate=True)
+        assert np.array_equal(flat.labels, two.labels)
+        assert flat.quality["cut"] == two.quality["cut"]
+        assert two.imbalance() <= mesh_problem.epsilon + 1e-9
+
+
+@needs8
+class TestShardedBatchedRefinement:
+    """sharded_batched_balanced_kmeans == batched_balanced_kmeans."""
+
+    def _batch(self, problem, k1):
+        # carve the problem into k1 coarse blocks and refine each into
+        # k2 = k / k1 sub-blocks, exactly as hierarchical_partition does
+        from repro.core.partitioner import sfc_initial_centers
+        from repro.partition.algorithms import make_bkm_config
+        k2 = problem.k // k1
+        coarse = partition(problem.replace(k=k1), devices=8)
+        cfg = make_bkm_config(problem, k=k2, warmup=False)
+        bpts, bw, gather, counts = build_refinement_batch(
+            problem.points, problem.weights, np.asarray(coarse.labels),
+            k1)
+        w_host = np.asarray(problem.weights, np.float64)
+        centers0 = np.stack([
+            sfc_initial_centers(bpts[b, :counts[b]], k2,
+                                w_host[gather[b, :counts[b]]])
+            for b in range(k1)])
+        target = problem.total_weight / (k1 * k2)
+        return bpts, bw, centers0, target, cfg
+
+    @pytest.mark.parametrize("k1", [4, 2])
+    def test_bitexact_vs_host_vmap(self, problem, k1):
+        bpts, bw, centers0, target, cfg = self._batch(problem, k1)
+        host = batched_balanced_kmeans(bpts, bw, centers0, cfg,
+                                       target_weight=target)
+        shrd = sharded_batched_balanced_kmeans(bpts, bw, centers0, cfg,
+                                               devices=(2, 4),
+                                               target_weight=target)
+        for h, s in zip(host[:3], shrd[:3]):
+            assert np.array_equal(np.asarray(h), np.asarray(s))
+
+    def test_padded_batch_bitexact(self):
+        # B=3 blocks over P2=4 refine devices: padded with block 0,
+        # padding outputs dropped — results still bit-exact and B-sized
+        rng = np.random.default_rng(9)
+        B, m, k2 = 3, 256, 2
+        bpts = rng.random((B, m, 2))
+        bw = rng.uniform(0.5, 2.0, (B, m))
+        centers0 = bpts[:, :k2, :].copy()
+        cfg = BKMConfig(k=k2, epsilon=0.05, warmup=False)
+        host = batched_balanced_kmeans(bpts, bw, centers0, cfg)
+        shrd = sharded_batched_balanced_kmeans(bpts, bw, centers0, cfg,
+                                               devices=(2, 4))
+        assert np.asarray(shrd[0]).shape == (B, m)
+        for h, s in zip(host[:3], shrd[:3]):
+            assert np.array_equal(np.asarray(h), np.asarray(s))
+        hleaves, hdef = jax.tree.flatten(host[3])
+        sleaves, sdef = jax.tree.flatten(shrd[3])
+        assert hdef == sdef
+        for h, s in zip(hleaves, sleaves):
+            assert np.array_equal(np.asarray(h), np.asarray(s))

@@ -29,6 +29,13 @@ baselines and exits non-zero on a regression:
   and schema-field coverage are hard; the measured utilization numbers
   (an absolute 0.1% sanity floor and a >10% regression envelope vs
   baseline) are wall-clock-derived and soft unless ``--gate-time``.
+* scaling ``weak_scaling`` record (``compare_weak_scaling``): the
+  out-of-core memory gate — measured incremental peak RSS of the
+  streaming sharded deal + solve must stay <= ``rss_ceiling`` (1.25x)
+  times the analytic sharded working set, the probe problem must be
+  float32, and the chunked-deal / 2-D-mesh bit-parity booleans must
+  hold. All hard: RSS high-water marks come from a dedicated fresh
+  subprocess, so the ratio is not wall-clock-noise-bound.
 * repartition: the warm-vs-cold acceptance floors hold absolutely
   (``iters_ratio >= 3``, ``migration_ratio <= 0.30``, every step of both
   runs balanced), and the warm run's mean iterations / mean migration
@@ -206,6 +213,52 @@ def compare_roofline(base, cur, rep: Report, gate_time: bool):
                      + _fmt(util, butil), hard=gate_time)
 
 
+WEAK_SCALING_FIELDS = ("n", "k", "devices", "chunk", "peak_rss_bytes",
+                       "incremental_peak_bytes", "working_set_bytes",
+                       "rss_ratio", "rss_ceiling", "time_s", "imbalance",
+                       "points_dtype")
+
+
+def compare_weak_scaling(base, cur, rep: Report):
+    """Hard memory-ceiling gate on the out-of-core weak-scaling record:
+    the measured incremental peak RSS of the streaming sharded deal +
+    solve must stay under ``rss_ceiling`` x the analytic working set
+    (a reintroduced O(n) float64 host copy blows it), and the bit-parity
+    booleans (chunked deal == one-shot, 2-D mesh == flat) must hold."""
+    rec = cur.get("weak_scaling")
+    if rec is None:
+        rep.add(FAIL, "scaling.weak_scaling",
+                "weak_scaling memory record missing from current run")
+        return
+    for fld in WEAK_SCALING_FIELDS:
+        rep.gate(rec.get(fld) is not None, f"scaling.weak_scaling.{fld}",
+                 "schema field missing/null from the weak_scaling record")
+    brec = base.get("weak_scaling", {})
+    for fld in ("n", "k", "devices", "chunk"):
+        rep.gate(brec.get(fld) == rec.get(fld),
+                 f"scaling.weak_scaling.config.{fld}",
+                 "incommensurable weak_scaling records: "
+                 + _fmt(rec.get(fld), brec.get(fld)))
+    rep.gate(rec.get("points_dtype") == "float32",
+             "scaling.weak_scaling.points_dtype",
+             "probe problem must be float32 — the record exists to prove "
+             "no float64 up-cast: " + _fmt(rec.get("points_dtype"),
+                                           "float32"))
+    ratio, ceil = rec.get("rss_ratio"), rec.get("rss_ceiling")
+    if ratio is not None and ceil is not None:
+        rep.gate(ratio <= ceil, "scaling.weak_scaling.rss_ratio",
+                 f"peak host RSS blew the memory ceiling: incremental "
+                 f"peak = {ratio:.3f}x the analytic sharded working set "
+                 f"(ceiling {ceil}x) — an O(n) full-host or float64 "
+                 "staging copy has crept back into the deal/solve path")
+    rep.gate(rec.get("chunked_deal_bitexact") is True,
+             "scaling.weak_scaling.chunked_deal_bitexact",
+             "chunked deal is not bit-identical to the one-shot deal")
+    rep.gate(rec.get("mesh2d_labels_equal") is True,
+             "scaling.weak_scaling.mesh2d_labels_equal",
+             "2-D device mesh labels differ from the flat-mesh run")
+
+
 def compare_scaling(base, cur, tol: float, rep: Report,
                     gate_time: bool, time_tol: float):
     rep.gate(base.get("quick") == cur.get("quick"), "scaling.config.quick",
@@ -214,6 +267,7 @@ def compare_scaling(base, cur, tol: float, rep: Report,
                                          base.get("quick")))
     compare_hotloop(base, cur, rep, gate_time)
     compare_roofline(base, cur, rep, gate_time)
+    compare_weak_scaling(base, cur, rep)
     cur_rows = {(r["method"], r["devices"]): r for r in cur.get("spmd", [])}
     seen_devices = {r["devices"] for r in cur.get("spmd", [])}
     for d in (1, 2, 4, 8):
